@@ -1,0 +1,52 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def realistic_tensor(kind: str, n: int, dtype, seed: int = 0):
+    """Synthetic tensors matching the paper's tensor classes (Table 1).
+
+    weights: trained-LLM scale, N(0, 0.02); activations: post-norm, unit
+    scale with outliers; gradients: small scale with exact zeros (sparse
+    rows, e.g. untouched vocab)."""
+    rng = np.random.default_rng(seed)
+    if kind == "weight":
+        x = rng.normal(0, 0.02, n)
+    elif kind == "activation":
+        x = rng.normal(0, 1.0, n)
+        out = rng.random(n) < 0.001
+        x[out] *= 30  # outlier features
+    elif kind == "gradient":
+        x = rng.normal(0, 1e-4, n)
+        x[rng.random(n) < 0.05] = 0.0  # exact zeros
+    elif kind == "uniform":
+        x = rng.uniform(-1, 1, n)
+    else:
+        raise ValueError(kind)
+    return jnp.asarray(x, dtype)
+
+
+def wall(fn, *args, iters: int = 3, warmup: int = 1):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def table(title: str, header: list, rows: list):
+    print(f"\n== {title} ==")
+    w = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows else len(str(h))
+         for i, h in enumerate(header)]
+    print("  " + " | ".join(str(h).ljust(w[i]) for i, h in enumerate(header)))
+    print("  " + "-+-".join("-" * x for x in w))
+    for r in rows:
+        print("  " + " | ".join(str(c).ljust(w[i]) for i, c in enumerate(r)))

@@ -1,0 +1,59 @@
+"""Paper Fig. 16: robustness under constrained GPU resources.
+
+(a) Buffer memory: large tensors chunked through a fixed 164 MB staging
+    buffer still gain (+41.2% for 128 MB tensors on H200).
+(b) SM availability: with 50% of SMs, +20.4% remains (codec throughput
+    halves but overlap hides most of it).
+
+TPU/CPU analogue: (a) chunk a 128 MB transfer through a bounded staging
+buffer; (b) scale the codec rate by an "available compute" factor (SMs →
+fraction of VPU lanes / host threads) and re-model split-send."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import realistic_tensor, table
+from repro.p2p.engine import CodecModel, Compressor, WireModel
+
+
+def run():
+    wire = WireModel(bandwidth=50e9)
+    cm = CodecModel()
+    eng = Compressor(codec_name="packed")
+    size_mb = 128
+    n = size_mb * (1 << 20) // 2
+    x = realistic_tensor("uniform", n, jnp.bfloat16)
+
+    # (a) staging-buffer constraint: chunk to fit `buf` MB
+    rows_a = []
+    for buf_mb in [164, 64, 32, 16]:
+        C = max(1, -(-size_mb // buf_mb))
+        mc = eng.encode(x[: n // C])
+        t_codec = cm.t_total(mc.raw_bytes)
+        t_wire = wire.t(mc.wire_bytes())
+        # chunks pipeline: codec of k+1 overlaps wire of k
+        t_total = t_codec + max((C - 1) * t_codec, (C - 1) * t_wire) + t_wire
+        t_raw = wire.t(n * 2)
+        rows_a.append([f"{buf_mb} MB", C, f"{t_raw/t_total:.2f}x"])
+    table("Fig. 16a — 128 MB transfer through a bounded staging buffer",
+          ["buffer", "chunks", "speedup vs raw"], rows_a)
+
+    # (b) compute-availability constraint: codec rate scaled by frac
+    msg = eng.encode(x)
+    rows_b = []
+    for frac in [1.0, 0.75, 0.5, 0.25]:
+        t_split = cm.t_split(msg.raw_bytes) / frac
+        t_encode = cm.t_encode(msg.raw_bytes) / frac
+        lo_b = msg.lo_payload.nbytes
+        exp_b = msg.wire_bytes() - lo_b
+        t_ss = t_split + max(wire.t(lo_b), t_encode) + wire.t(exp_b)
+        t_raw = wire.t(msg.raw_bytes)
+        rows_b.append([f"{frac*100:.0f}%", f"{t_raw/t_ss:.2f}x"])
+    table("Fig. 16b — split-send gain vs available codec compute",
+          ["compute", "speedup vs raw"], rows_b)
+    print("  paper: 164 MB buffer still +41.2%; 50% SMs still +20.4%")
+    return {"buffer": rows_a, "compute": rows_b}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Paper Fig. 5c: localized (sampled) frequency tables vs global table.
+
+Paper: per-CTA tables built from a 256 KB sample of each block's range cost
+only ~4.5% compression ratio vs the global table, across tensor sizes.
+We measure the same: per-block rANS tables built from a prefix sample vs
+one global table, on realistic bf16 weight tensors."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import realistic_tensor, table
+from repro.core import ans, codec
+
+
+def xentropy_bits(counts: np.ndarray, table_freq: np.ndarray) -> float:
+    p = counts / max(counts.sum(), 1)
+    q = np.asarray(table_freq, np.float64) / ans.M
+    mask = p > 0
+    return float(-(p[mask] * np.log2(q[mask])).sum())
+
+
+def run():
+    rows = []
+    for size_mb in [4, 16, 64]:
+        n = size_mb * (1 << 20) // 2
+        x = realistic_tensor("weight", n, jnp.bfloat16, seed=size_mb)
+        exp, _ = codec.split_planes(x)
+        exp_np = np.asarray(exp)
+        lay = codec.layout_of(x.dtype)
+
+        g_table = ans.build_freq_table(exp)
+        g_counts = np.bincount(exp_np, minlength=256)
+        bits_global = xentropy_bits(g_counts, np.asarray(g_table.freq))
+
+        block = (4 << 20)  # 4 MB of exponents per "CTA range"
+        sample = 256 << 10  # paper: sample the first 256 KB
+        bits_local, weight = 0.0, 0
+        for s in range(0, n, block):
+            chunk = exp_np[s : s + block]
+            t = ans.build_freq_table(jnp.asarray(chunk[:sample]))
+            counts = np.bincount(chunk, minlength=256)
+            bits_local += xentropy_bits(counts, np.asarray(t.freq)) * len(chunk)
+            weight += len(chunk)
+        bits_local /= weight
+
+        r_g = (lay.lo_bits + bits_global) / lay.total_bits
+        r_l = (lay.lo_bits + bits_local) / lay.total_bits
+        rows.append([f"{size_mb} MB", f"{r_g:.4f}", f"{r_l:.4f}",
+                     f"{(r_l/r_g-1)*100:.2f}%"])
+    table("Fig. 5c — global vs localized (sampled) frequency tables",
+          ["tensor", "ratio global", "ratio localized", "penalty"],
+          rows)
+    print("  paper: localized tables cost ≈4.5% ratio, constant over sizes")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Paper Fig. 7a: Uzip-P2P throughput across tensor sizes.
+
+Paper (2×p5en, EFA): gains grow with size; +52.9% at 1 GB (72.2 vs
+47.2 GB/s), approaching the Amdahl bound for a 0.64 ratio; modest at
+8–32 MB.  We reproduce the shape of the curve with the host P2P engine:
+measured split/encode times on CPU + the assignment's 50 GB/s link model.
+Compression ratio uses the paper's setup (bf16, uniform [-1,1] → ~0.64)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import realistic_tensor, table
+from repro.p2p.engine import CodecModel, Compressor, WireModel
+
+
+def run():
+    wire = WireModel(bandwidth=50e9)
+    cm = CodecModel()  # paper-calibrated H200 codec rates
+    eng = Compressor(codec_name="packed")
+    rows = []
+    for size_mb in [1, 4, 16, 64, 256]:
+        n = size_mb * (1 << 20) // 2
+        x = realistic_tensor("uniform", n, jnp.bfloat16, seed=size_mb)
+        msg = eng.encode(x, tensor_class="p2p")
+        rep = eng.transfer_times(msg, wire, codec_model=cm)
+        raw_gbps = msg.raw_bytes / rep["t_raw"] / 1e9
+        ss_gbps = msg.raw_bytes / rep["t_split_send"] / 1e9
+        rows.append([
+            f"{size_mb} MB", f"{rep['ratio']:.3f}",
+            f"{raw_gbps:.1f}", f"{ss_gbps:.1f}",
+            f"{(ss_gbps/raw_gbps-1)*100:+.1f}%",
+        ])
+    table("Fig. 7a — P2P throughput: raw vs split-send (50 GB/s link model,"
+          " H200-rate codec, measured ratios)",
+          ["tensor", "ratio", "raw GB/s", "uzip GB/s", "gain"], rows)
+    print("  paper: +52.9% at 1 GB (EFA, ratio 0.64); gains grow with "
+          "size.  Codec stage times: paper-calibrated H200 rates "
+          "(CPU-measured rates are fig3's subject); ratios measured here.")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

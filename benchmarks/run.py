@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig7,fig9]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("table1", "benchmarks.table1_ratios"),
+    ("fig3", "benchmarks.fig3_sublinear"),
+    ("fig5c", "benchmarks.fig5c_local_tables"),
+    ("fig7", "benchmarks.fig7_p2p"),
+    ("fig8", "benchmarks.fig8_collectives"),
+    ("fig9", "benchmarks.fig9_twoshot"),
+    ("fig11", "benchmarks.fig11_kv_transfer"),
+    ("fig12", "benchmarks.fig12_stability"),
+    ("fig13", "benchmarks.fig13_dtypes"),
+    ("fig15", "benchmarks.fig15_strategies"),
+    ("fig16", "benchmarks.fig16_resources"),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated keys, e.g. fig7,fig9")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    failures = []
+    for key, modname in MODULES:
+        if only and key not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(modname)
+            mod.run()
+            print(f"  [{key} done in {time.time()-t0:.1f}s]")
+        except Exception:
+            failures.append(key)
+            print(f"  [{key} FAILED]")
+            traceback.print_exc()
+    print(f"\n{'ALL BENCHMARKS PASSED' if not failures else 'FAILED: ' + ', '.join(failures)}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

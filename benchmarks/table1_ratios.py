@@ -1,0 +1,54 @@
+"""Paper Table 1: compression ratios of representative tensor classes.
+
+Paper: FP32 gradients 0.848; BF16 activations 0.679; BF16 weights 0.675.
+We report the rANS coder's measured ratio (the paper-faithful codec) and
+the static packed-width in-collective ratio, on synthetic tensors matching
+each class's statistics."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import realistic_tensor, table
+from repro.core import ans, codec
+from repro.core.calibrate import choose_width
+from repro.p2p.engine import Compressor
+
+
+CASES = [
+    ("gradient", jnp.float32, 0.848),
+    ("activation", jnp.bfloat16, 0.679),
+    ("weight", jnp.bfloat16, 0.675),
+]
+
+
+def ans_ratio(x) -> float:
+    lay = codec.layout_of(x.dtype)
+    exp, _ = codec.split_planes(x)
+    bits = float(ans.ans_ratio_estimate(exp))
+    return (lay.lo_bits + bits) / lay.total_bits
+
+
+def packed_ratio(x) -> float:
+    lay = codec.layout_of(x.dtype)
+    ch = choose_width(x)
+    return min(1.0, (lay.lo_bits + ch.width + 8 / 512) / lay.total_bits
+               + 0.002)
+
+
+def run(n: int = 1 << 21):
+    rows = []
+    for kind, dtype, paper in CASES:
+        x = realistic_tensor(kind, n, dtype)
+        r_ans = ans_ratio(x)
+        r_packed = packed_ratio(x)
+        rows.append([kind, jnp.dtype(dtype).name, f"{paper:.3f}",
+                     f"{r_ans:.3f}", f"{r_packed:.3f}"])
+    table("Table 1 — compression ratio by tensor class (lower = better)",
+          ["class", "dtype", "paper (ANS)", "ours rANS", "ours packed-W"],
+          rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,81 @@
+"""Prefill-decode disaggregation with compressed KV transfer (paper §5.3.2).
+
+    PYTHONPATH=src python examples/pd_disaggregation.py
+
+P1D3 layout: one "prefill worker" fills KV caches, three "decode workers"
+generate.  The KV cache crosses the wire through the host P2P engine
+(pack_cache/unpack_cache) with lossless compression; generation on the
+decode side is verified identical to a colocated run."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import transformer
+from repro.p2p.engine import Compressor, WireModel
+from repro.serve.kv_transfer import pack_cache, unpack_cache
+
+
+def greedy_decode(params, cfg, cache, first_tok, n, enc_out=None):
+    toks = [int(first_tok[0, 0])]
+    cur = first_tok
+    for _ in range(n - 1):
+        logits, cache = transformer.decode_step(params, cur, cache, cfg,
+                                                enc_out=enc_out)
+        cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        toks.append(int(cur[0, 0]))
+    return toks, cache
+
+
+def main():
+    cfg = configs.get_smoke("tinyllama_1_1b")
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    eng = Compressor(codec_name="packed")
+    wire = WireModel(bandwidth=50e9)
+    rng = np.random.default_rng(0)
+    max_len = 192
+
+    prompts = [rng.integers(0, cfg.vocab, 96).astype(np.int32)
+               for _ in range(3)]
+    print("P1D3: 1 prefill worker, 3 decode workers; 96-token prompts, "
+          "16 new tokens each\n")
+    for d, prompt in enumerate(prompts):
+        # ---- prefill worker ----
+        cache = transformer.init_cache(cfg, 1, max_len)
+        logits, cache = transformer.prefill(
+            params, {"tokens": jnp.asarray(prompt[None])}, cfg, cache)
+        first = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+
+        # ---- KV transfer (compressed) ----
+        t0 = time.perf_counter()
+        pkg = pack_cache(cache, eng)
+        t_pack = time.perf_counter() - t0
+        raw_b = sum(np.asarray(l).nbytes
+                    for l in jax.tree_util.tree_leaves(cache))
+        wire_b = sum(m.wire_bytes() if hasattr(m, "wire_bytes")
+                     else np.asarray(m).nbytes for m in pkg["messages"])
+        cache_dec = unpack_cache(pkg, eng)
+
+        # ---- decode worker d ----
+        toks_d, _ = greedy_decode(params, cfg, cache_dec, first, 16)
+        # ---- colocated reference ----
+        toks_ref, _ = greedy_decode(params, cfg, cache, first, 16)
+        same = toks_d == toks_ref
+        print(f"decode worker {d}: cache {raw_b/2**20:5.2f} MiB -> "
+              f"{wire_b/2**20:5.2f} MiB (ratio {wire_b/raw_b:.3f}), "
+              f"modelled latency cut {(1-wire_b/raw_b)*100:4.1f}%, "
+              f"tokens match colocated: {same}")
+        assert same, "PD-disaggregated generation must be bit-identical"
+    print("\npaper: up to 30.1% KV-transfer latency cut (P1D3, vLLM) -> "
+          "~10% end-to-end; transfer here is verified lossless")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Quickstart: the UCCL-Zip core in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. split a bf16 tensor into planes (paper Step 1) and inspect the skew,
+2. compress it losslessly with the rANS coder and the static packed codec,
+3. run a compressed all-reduce inside shard_map on the local mesh,
+4. train a tiny model for 20 steps with the compressed two-shot gradient
+   sync and confirm the loss curve matches the uncompressed twin exactly.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.core import ans, codec, packing
+from repro.core.policy import CompressionPolicy
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import registry
+from repro.optim import optimizers as opt_lib
+from repro.train import step as step_lib
+
+
+def main():
+    # -- 1. plane split -------------------------------------------------------
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 0.02, 1 << 20), jnp.bfloat16)  # weights
+    exp, lo = codec.split_planes(x)
+    ent = float(codec.exponent_entropy_bits(exp, 8))
+    print(f"bf16 tensor: exponent entropy {ent:.2f} bits / 8 "
+          f"(skewed -> compressible); lo plane {codec.plane_fractions(x.dtype)[0]*100:.0f}% of raw")
+
+    # -- 2. lossless codecs ---------------------------------------------------
+    table = ans.build_freq_table(exp)
+    stream = ans.encode(exp[: 1 << 16], table)
+    back = ans.decode(stream)
+    assert (back == exp[: 1 << 16]).all()
+    r_ans = (8 + float(ans.ans_ratio_estimate(exp))) / 16
+    msg = packing.encode_message(x, width=5)
+    y = packing.decode_message(msg)
+    assert (jax.lax.bitcast_convert_type(x, jnp.uint16)
+            == jax.lax.bitcast_convert_type(y, jnp.uint16)).all()
+    print(f"rANS ratio {r_ans:.3f} (paper bf16 ≈ 0.675) | "
+          f"packed-width ratio {msg.ratio():.3f} (static-shape wire) | "
+          f"both bit-exact")
+
+    # -- 3. compressed all-reduce --------------------------------------------
+    from repro.core.compressed_collectives import psum_compressed
+    mesh = make_smoke_mesh()
+    policy = CompressionPolicy(min_bytes=0)
+    g = jnp.asarray(rng.normal(0, 1e-3, 1 << 18), jnp.bfloat16)
+
+    def sync(v):
+        out, flag = psum_compressed(v, "data", policy=policy)
+        return out, flag
+
+    f = jax.jit(jax.shard_map(
+        sync, mesh=mesh, in_specs=(P(),), out_specs=(P(), P()),
+        axis_names={"data"}, check_vma=False))
+    out, flag = f(g)
+    ref = g.astype(jnp.float32) * mesh.shape["data"]
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32) - ref)))
+    print(f"compressed two-shot all-reduce on mesh {dict(zip(mesh.axis_names, mesh.devices.shape))}: "
+          f"max err {err:.2e}, overflow {int(flag)}")
+
+    # -- 4. compressed vs raw training: identical curves ----------------------
+    cfg = configs.get_smoke("smollm_135m")
+    mesh = make_smoke_mesh()
+    mk = lambda pol: step_lib.TrainConfig(
+        microbatches=1, policy=pol,
+        optim=opt_lib.OptimConfig(lr=1e-3, warmup_steps=5))
+    batch = registry.make_batch(cfg, 4, 64)
+    curves = {}
+    for name, pol in [("compressed", CompressionPolicy(min_bytes=0)),
+                      ("raw", CompressionPolicy.disabled())]:
+        tcfg = mk(pol)
+        step, _ = step_lib.build_train_step(cfg, tcfg, mesh)
+        state, _ = step_lib.build_train_state(cfg, tcfg, mesh,
+                                              jax.random.PRNGKey(7))
+        jstep = jax.jit(step, donate_argnums=(0,))
+        losses = []
+        for _ in range(20):
+            state, m = jstep(state, batch)
+            losses.append(float(m["loss"]))
+        curves[name] = losses
+    same = all(a == b for a, b in zip(curves["compressed"], curves["raw"]))
+    print(f"20-step training curves identical: {same} "
+          f"(final loss {curves['compressed'][-1]:.4f}) — lossless end-to-end")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""RL weight synchronization with UZIP-P2P (paper §5.3.1, Fig. 10).
+
+    PYTHONPATH=src python examples/rl_weight_sync.py
+
+The paper's headline P2P workload: an RL pipeline where 4 trainer GPUs push
+updated policy weights to 4 rollout GPUs every iteration.  Here a GLM4-9B
+(the paper's model) smoke twin is trained for a few steps; after each
+update phase the full weight pytree is shipped through the host P2P engine
+with split-send compression, decoded on the "rollout" side, and verified
+bit-exact.  Reported: per-tensor ratio/throughput (paper: +47.5% on the
+214 MB gate_up_proj) under the 50 GB/s link model, plus real CPU codec
+times."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core.policy import CompressionPolicy
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import registry, transformer
+from repro.optim import optimizers as opt_lib
+from repro.p2p.engine import CodecModel, Compressor, WireModel
+from repro.train import step as step_lib
+
+
+def sync_weights(params, eng, wire, cm):
+    """Trainer -> rollout: bucket ALL weights into one flat message per
+    dtype (paper Property 1: large blocks keep the codec efficient),
+    encode, (modelled) wire at H200 codec rates, decode, verify."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    groups = {}
+    for i, l in enumerate(leaves):
+        groups.setdefault(jnp.dtype(l.dtype).name, []).append(i)
+    out = list(leaves)
+    total_raw = total_wire = 0
+    t_raw = t_ss = 0.0
+    ok = True
+    for name, idxs in groups.items():
+        bucket = jnp.concatenate([leaves[i].reshape(-1) for i in idxs])
+        msg = eng.encode(bucket, tensor_class=f"weight_{name}")
+        rep = eng.transfer_times(msg, wire, codec_model=cm)
+        total_raw += rep["raw_bytes"]
+        total_wire += rep["wire_bytes"]
+        t_raw += rep["t_raw"]
+        t_ss += rep["t_split_send"]
+        dec = eng.decode(msg)
+        if bucket.dtype == jnp.bfloat16:
+            ok &= bool(jnp.all(jax.lax.bitcast_convert_type(dec, jnp.uint16)
+                               == jax.lax.bitcast_convert_type(bucket,
+                                                               jnp.uint16)))
+        else:
+            ok &= bool(jnp.all(dec == bucket))
+        off = 0
+        for i in idxs:
+            n = leaves[i].size
+            out[i] = dec[off:off + n].reshape(leaves[i].shape)
+            off += n
+    return (jax.tree_util.tree_unflatten(treedef, out),
+            dict(ratio=total_wire / total_raw, t_raw=t_raw, t_ss=t_ss,
+                 exact=ok, raw_mb=total_raw / 2**20))
+
+
+def main():
+    mesh = make_smoke_mesh()
+    cfg = configs.get_smoke("glm4_9b")
+    tcfg = step_lib.TrainConfig(
+        microbatches=1, policy=CompressionPolicy(min_bytes=0),
+        optim=opt_lib.OptimConfig(lr=1e-3, warmup_steps=5))
+    step, _ = step_lib.build_train_step(cfg, tcfg, mesh)
+    state, _ = step_lib.build_train_state(cfg, tcfg, mesh,
+                                          jax.random.PRNGKey(0))
+    jstep = jax.jit(step, donate_argnums=(0,))
+    batch = registry.make_batch(cfg, 4, 64)
+
+    eng = Compressor(codec_name="packed")
+    wire = WireModel(bandwidth=50e9)
+    cm = CodecModel()  # paper-calibrated H200 codec rates for the model
+    print("iter | loss   | weights MB | ratio | split-send gain | exact")
+    rollout_params = None
+    for it in range(3):
+        for _ in range(5):  # "policy optimization" phase
+            state, m = jstep(state, batch)
+        rollout_params, rep = sync_weights(state["params"], eng, wire, cm)
+        print(f"  {it:2d} | {float(m['loss']):.4f} | {rep['raw_mb']:8.1f}  "
+              f"| {rep['ratio']:.3f} | {(rep['t_raw']/rep['t_ss']-1)*100:+6.1f}% "
+              f"| {rep['exact']}")
+    print("\nNOTE the smoke model's 0.2 MB is far below the paper's 1 MB "
+          "compression threshold — the negative gain above is exactly WHY "
+          "the policy gates on size (paper §5.1).")
+
+    # the paper's headline tensor: gate_up_proj, 214 MB bf16
+    big = jnp.asarray(
+        np.random.default_rng(0).normal(0, 0.02, 214 * (1 << 20) // 2),
+        jnp.bfloat16)
+    msg = eng.encode(big, tensor_class="gate_up_proj")
+    rep = eng.transfer_times(msg, wire, codec_model=cm)
+    print(f"\npaper-scale tensor (214 MB, trained-weight stats): ratio "
+          f"{rep['ratio']:.3f}, split-send gain "
+          f"{(rep['t_raw']/rep['t_split_send']-1)*100:+.1f}% "
+          f"(paper: +47.5% with ANS ratio 0.675; packed-wire ceiling is "
+          f"1/ratio = +{(1/rep['ratio']-1)*100:.0f}%)")
+
+
+if __name__ == "__main__":
+    main()

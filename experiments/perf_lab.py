@@ -1,0 +1,170 @@
+"""Perf hillclimbing lab: lower named VARIANTS of a cell, emit the 3-term
+roofline for each, and diff against the baseline.
+
+    PYTHONPATH=src python experiments/perf_lab.py --cell smollm_135m:train_4k \
+        --variants baseline,raw,width4,ring
+
+Each variant re-lowers the full step on the production mesh and reports
+compute/memory/collective terms + per-device temp memory, so a hypothesis →
+change → measure cycle is one invocation (EXPERIMENTS.md §Perf logs these).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core.calibrate import CompressionProfile
+from repro.core.policy import CompressionPolicy
+from repro.launch import cells as cells_lib
+from repro.launch.dryrun import build_step_fn, input_specs, make_train_config
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                                     Roofline, model_flops_for)
+from repro.roofline.model import analytic_cost, collective_bytes_trip_aware
+from repro.train import step as step_lib
+
+
+def lower_cell(arch, shape_name, mesh, *, tcfg=None, serve_tweaks=None,
+               compressed=True):
+    from repro.launch import dryrun as dr
+    cfg = configs.get(arch)
+    shape = cells_lib.SHAPES[shape_name]
+    if shape.kind == "train":
+        tcfg = tcfg or make_train_config(arch, mesh, compressed=compressed)
+        step, _ = step_lib.build_train_step(cfg, tcfg, mesh)
+        state, _ = step_lib.abstract_train_state(cfg, tcfg, mesh)
+        batch = dr._batch_structs(cfg, mesh, shape.global_batch,
+                                  shape.seq_len,
+                                  dp=step_lib.dp_axes_of(mesh))
+        args = (state, batch)
+        donate = (0,)
+    else:
+        step, donate = build_step_fn(arch, shape_name, mesh,
+                                     compressed=compressed)
+        args = input_specs(arch, shape_name, mesh)
+    with mesh:
+        t0 = time.time()
+        compiled = jax.jit(step, donate_argnums=donate).lower(*args).compile()
+        dt = time.time() - t0
+    return compiled, dt
+
+
+def analyze(compiled, arch, shape_name, mesh_kind, *, micro_remat=None):
+    mem = compiled.memory_analysis()
+    coll = collective_bytes_trip_aware(compiled.as_text())
+    n_chips = 512 if mesh_kind == "multi" else 256
+    ac = analytic_cost(arch, shape_name, mesh_kind, micro_remat=micro_remat)
+    r = Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_kind,
+        flops=ac.total_flops / n_chips,
+        hbm_bytes=ac.hbm_bytes_per_device,
+        coll_bytes=float(coll["total_bytes"]),
+        model_flops=ac.model_flops,
+        n_chips=n_chips)
+    return r, mem, coll
+
+
+def make_variant(name, arch, mesh):
+    """Named variants = the hillclimb levers."""
+    base = make_train_config(arch, mesh)
+    prof = base.policy.profile
+    V = {
+        "baseline": dict(tcfg=base),
+        "raw": dict(tcfg=make_train_config(arch, mesh, compressed=False),
+                    compressed=False),
+        "width4": dict(tcfg=dataclasses.replace(base, policy=CompressionPolicy(
+            profile=dataclasses.replace(
+                prof, widths={k: 4 for k in prof.widths})))),
+        "width6": dict(tcfg=dataclasses.replace(base, policy=CompressionPolicy(
+            profile=dataclasses.replace(
+                prof, widths={k: 6 for k in prof.widths})))),
+        "block1k": dict(tcfg=dataclasses.replace(base, policy=CompressionPolicy(
+            profile=dataclasses.replace(prof, block=1024)))),
+        "block2k": dict(tcfg=dataclasses.replace(base, policy=CompressionPolicy(
+            profile=dataclasses.replace(prof, block=2048)))),
+        "ring": dict(tcfg=dataclasses.replace(base, policy=CompressionPolicy(
+            allreduce_algorithm="ring", profile=prof))),
+        "micro_half": dict(tcfg=dataclasses.replace(
+            base, microbatches=max(1, base.microbatches // 2))),
+        "micro_double": dict(tcfg=dataclasses.replace(
+            base, microbatches=base.microbatches * 2)),
+        "no_guard": dict(tcfg=dataclasses.replace(base,
+                                                  guard_overflow=False)),
+        "losschunk512": dict(tcfg=dataclasses.replace(base, loss_chunk=512)),
+        "losschunk2k": dict(tcfg=dataclasses.replace(base, loss_chunk=2048)),
+        "dp_only": dict(tcfg=make_train_config(arch, mesh, dp_only=True)),
+        "dp_only_raw": dict(tcfg=make_train_config(
+            arch, mesh, dp_only=True, compressed=False)),
+        "dp_only_w4": dict(tcfg=dataclasses.replace(
+            make_train_config(arch, mesh, dp_only=True),
+            policy=CompressionPolicy(profile=dataclasses.replace(
+                prof, widths={k: 4 for k in prof.widths})))),
+        "dp_only_noremat": dict(tcfg=dataclasses.replace(
+            make_train_config(arch, mesh, dp_only=True), remat=False)),
+        "noremat": dict(tcfg=dataclasses.replace(base, remat=False)),
+    }
+    return V[name]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--variants", default="baseline,raw")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    arch, shape = args.cell.split(":")
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    out = []
+    print(f"cell {args.cell} on {args.mesh} mesh")
+    print(f"{'variant':14s} {'compute ms':>10s} {'memory ms':>10s} "
+          f"{'coll ms':>9s} {'bound':>11s} {'temp GiB':>9s} "
+          f"{'roofl-frac':>10s} {'compile s':>9s}")
+    for vname in args.variants.split(","):
+        try:
+            kw = make_variant(vname, arch, mesh) if shape == "train_4k" or \
+                cells_lib.SHAPES[shape].kind == "train" else (
+                dict(compressed=(vname != "raw")))
+            compiled, dt = lower_cell(arch, shape, mesh, **kw)
+            tc = kw.get("tcfg")
+            mr = (tc.microbatches > 1) if tc is not None else None
+            r, mem, coll = analyze(compiled, arch, shape, args.mesh,
+                                   micro_remat=mr)
+            if tc is not None and not tc.remat:
+                # layer remat off: subtract the replay fwd-equivalent
+                from repro.roofline.model import analytic_cost
+                ac = analytic_cost(arch, shape, args.mesh, micro_remat=mr)
+                scale = (ac.total_flops - ac.model_flops / 3) / ac.total_flops
+                r = dataclasses.replace(r, flops=r.flops * scale)
+            temp = (mem.temp_size_in_bytes or 0) / 2**30
+            print(f"{vname:14s} {r.t_compute*1e3:10.2f} {r.t_memory*1e3:10.2f} "
+                  f"{r.t_collective*1e3:9.2f} {r.bottleneck:>11s} "
+                  f"{temp:9.2f} {r.roofline_fraction:10.3f} {dt:9.1f}")
+            out.append(dict(variant=vname, t_compute=r.t_compute,
+                            t_memory=r.t_memory, t_collective=r.t_collective,
+                            bottleneck=r.bottleneck, temp_gib=temp,
+                            roofline_fraction=r.roofline_fraction,
+                            coll_by_kind=coll["bytes"],
+                            coll_counts=coll["counts"]))
+        except Exception as e:
+            print(f"{vname:14s} FAILED {type(e).__name__}: {str(e)[:120]}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

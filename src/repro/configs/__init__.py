@@ -1,0 +1,39 @@
+"""Architecture registry: one module per assigned architecture + the
+paper's own workload (glm4-9b).  ``get(name)`` returns the full ArchConfig;
+``get_smoke(name)`` a reduced same-family config for CPU smoke tests."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "tinyllama_1_1b",
+    "mistral_nemo_12b",
+    "gemma3_27b",
+    "smollm_135m",
+    "xlstm_350m",
+    "qwen2_vl_72b",
+    "deepseek_v2_lite_16b",
+    "deepseek_v3_671b",
+    "jamba_v0_1_52b",
+    "whisper_small",
+    "glm4_9b",
+]
+
+ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def _module(name: str):
+    name = ALIASES.get(name, name)
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get(name: str):
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str):
+    return _module(name).SMOKE
+
+
+def list_archs():
+    return list(ARCHS)

@@ -1,0 +1,212 @@
+"""Interleaved rANS entropy codec for exponent planes (paper §2.1.2, Steps 2-3).
+
+This is the paper-faithful ANS coder (DietGPU-style), used on the
+host-orchestrated P2P path where variable-length output is usable, and as
+the oracle for the Pallas rANS kernel.
+
+Design points mirroring the paper:
+  * 8-bit symbols = exponent bytes; only the exponent plane is entropy-coded.
+  * ``K`` interleaved lanes, each an independent rANS stream — the GPU
+    "one warp per block" structure mapped to TPU vector lanes.
+  * Frequency tables quantized to ``M = 2**PROB_BITS``; every symbol gets a
+    nonzero slot so *sampled* (localized, paper §3.3.1) tables remain
+    lossless even when rare symbols were unseen during sampling.
+  * Table transmitted once and reusable across calls (paper §3.4 metadata
+    amortization) — ``encode`` accepts an externally built table.
+
+rANS parameters: 32-bit state, 16-bit renormalization, state lower bound
+``L = 1 << 16``.  One conditional emission per symbol per lane (PROB_BITS +
+16 <= 32 guarantees a single renorm step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PROB_BITS = 12
+M = 1 << PROB_BITS
+RANS_L = jnp.uint32(1 << 16)
+NSYM = 256
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("freq", "cum"),
+    meta_fields=(),
+)
+@dataclasses.dataclass(frozen=True)
+class FreqTable:
+    freq: jax.Array  # uint32 (NSYM,) quantized frequencies, sum == M
+    cum: jax.Array  # uint32 (NSYM + 1,) exclusive prefix sums
+
+    def nbytes(self) -> int:
+        # wire representation: 256 x 12-bit frequencies
+        return NSYM * PROB_BITS // 8
+
+
+def build_freq_table(symbols: jax.Array) -> FreqTable:
+    """Quantized frequency table with every symbol >= 1 slot (lossless even
+    for symbols absent from the sample — paper's localized-table caveat)."""
+    counts = jnp.bincount(symbols.astype(jnp.int32).reshape(-1), length=NSYM)
+    counts = counts + 1  # Laplace floor: rare/unseen symbols stay encodable
+    total = counts.sum()
+    # float32 math: int32 `counts * (M - NSYM)` overflows beyond ~0.5M-count
+    # symbols (tensors > a few MB)
+    freq = jnp.floor(
+        counts.astype(jnp.float32) / total.astype(jnp.float32) * (M - NSYM)
+    ).astype(jnp.uint32) + 1
+    # fix rounding drift onto the most frequent symbol
+    drift = jnp.int32(M) - freq.sum().astype(jnp.int32)
+    top = jnp.argmax(freq)
+    freq = freq.at[top].add(drift.astype(jnp.uint32))
+    cum = jnp.concatenate(
+        [jnp.zeros((1,), jnp.uint32), jnp.cumsum(freq, dtype=jnp.uint32)]
+    )
+    return FreqTable(freq=freq, cum=cum)
+
+
+def _slot_to_symbol(table: FreqTable) -> jax.Array:
+    """uint8 (M,) decode lookup: slot -> symbol."""
+    sym_of_slot = jnp.searchsorted(
+        table.cum[1:], jnp.arange(M, dtype=jnp.uint32), side="right"
+    )
+    return sym_of_slot.astype(jnp.uint8)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("words", "lens", "table"),
+    meta_fields=("n", "lanes"),
+)
+@dataclasses.dataclass(frozen=True)
+class AnsStream:
+    words: jax.Array  # uint16 (lanes, cap) per-lane emitted words (incl. flush)
+    lens: jax.Array  # int32 (lanes,) words used per lane
+    table: FreqTable
+    n: int  # symbol count
+    lanes: int
+
+    def compressed_nbytes(self) -> jax.Array:
+        """Actual variable-length payload size (words + table + lens header)."""
+        return self.lens.sum() * 2 + self.table.nbytes() + self.lanes * 4
+
+
+def _lane_layout(n: int, lanes: int) -> int:
+    return -(-n // lanes)  # symbols per lane (ceil)
+
+
+def encode(symbols: jax.Array, table: FreqTable, lanes: int = 128) -> AnsStream:
+    """Encode uint8 symbols with K interleaved rANS lanes.
+
+    Lane j owns symbols ``j, j+K, j+2K, ...`` (round-robin, matching how the
+    decoder will emit them forward).  Symbols are consumed in *reverse* so
+    decode order is forward.  Padding symbols (index >= n) are skipped via
+    masking, not encoded.
+    """
+    n = symbols.shape[0]
+    per = _lane_layout(n, lanes)
+    pad = per * lanes - n
+    syms = jnp.concatenate([symbols, jnp.zeros((pad,), jnp.uint8)])
+    grid = syms.reshape(per, lanes)  # [step, lane]
+    valid = (jnp.arange(per * lanes).reshape(per, lanes)) < n
+
+    cap = per + 2  # <=1 word/symbol + 2 flush words
+    freq, cum = table.freq, table.cum
+
+    def step(carry, inp):
+        state, buf, ptr = carry
+        s, v = inp  # symbols (lanes,), valid mask (lanes,)
+        f = freq[s.astype(jnp.int32)]
+        c = cum[s.astype(jnp.int32)]
+        # renormalize: emit low 16 bits if state would overflow
+        x_max = ((RANS_L >> jnp.uint32(PROB_BITS)) << jnp.uint32(16)) * f
+        need = (state >= x_max) & v
+        word = (state & jnp.uint32(0xFFFF)).astype(jnp.uint16)
+        buf = buf.at[jnp.arange(lanes), jnp.minimum(ptr, cap - 1)].set(
+            jnp.where(need, word, buf[jnp.arange(lanes), jnp.minimum(ptr, cap - 1)])
+        )
+        ptr = ptr + need.astype(jnp.int32)
+        state = jnp.where(need, state >> jnp.uint32(16), state)
+        # rANS step
+        q = state // f
+        r = state - q * f
+        new_state = (q << jnp.uint32(PROB_BITS)) + r + c
+        state = jnp.where(v, new_state, state)
+        return (state, buf, ptr), None
+
+    state0 = jnp.full((lanes,), RANS_L, jnp.uint32)
+    buf0 = jnp.zeros((lanes, cap), jnp.uint16)
+    ptr0 = jnp.zeros((lanes,), jnp.int32)
+    # reverse order so the decoder runs forward
+    (state, buf, ptr), _ = jax.lax.scan(
+        step, (state0, buf0, ptr0), (grid[::-1], valid[::-1])
+    )
+    # flush: push the 32-bit final state as two words (low first)
+    lo = (state & jnp.uint32(0xFFFF)).astype(jnp.uint16)
+    hi = (state >> jnp.uint32(16)).astype(jnp.uint16)
+    lane_ix = jnp.arange(lanes)
+    buf = buf.at[lane_ix, ptr].set(lo)
+    buf = buf.at[lane_ix, ptr + 1].set(hi)
+    ptr = ptr + 2
+    return AnsStream(words=buf, lens=ptr, table=table, n=n, lanes=lanes)
+
+
+def decode(stream: AnsStream) -> jax.Array:
+    """Exact inverse of :func:`encode`; returns uint8 (n,)."""
+    lanes, n = stream.lanes, stream.n
+    per = _lane_layout(n, lanes)
+    freq, cum = stream.table.freq, stream.table.cum
+    s2s = _slot_to_symbol(stream.table)
+    buf, lens = stream.words, stream.lens
+    lane_ix = jnp.arange(lanes)
+
+    # init: pop the two flush words (written last -> read first, LIFO)
+    ptr = lens - 2
+    lo = buf[lane_ix, ptr].astype(jnp.uint32)
+    hi = buf[lane_ix, ptr + 1].astype(jnp.uint32)
+    state0 = lo | (hi << jnp.uint32(16))
+
+    valid = (jnp.arange(per * lanes).reshape(per, lanes)) < n
+
+    def step(carry, v):
+        state, ptr = carry
+        slot = state & jnp.uint32(M - 1)
+        sym = s2s[slot.astype(jnp.int32)]
+        f = freq[sym.astype(jnp.int32)]
+        c = cum[sym.astype(jnp.int32)]
+        new_state = f * (state >> jnp.uint32(PROB_BITS)) + slot - c
+        # renormalize: pull one word if state dropped below L
+        need = (new_state < RANS_L) & v
+        ptr2 = ptr - need.astype(jnp.int32)
+        word = buf[lane_ix, jnp.maximum(ptr2, 0)].astype(jnp.uint32)
+        new_state = jnp.where(
+            need, (new_state << jnp.uint32(16)) | word, new_state
+        )
+        state = jnp.where(v, new_state, state)
+        return (state, jnp.where(v, ptr2, ptr)), sym
+
+    (_, _), syms = jax.lax.scan(step, (state0, ptr), valid)
+    return syms.reshape(-1)[:n]  # [step, lane] layout == original order
+
+
+def roundtrip_exact(symbols: jax.Array, lanes: int = 128) -> bool:
+    table = build_freq_table(symbols)
+    out = decode(encode(symbols, table, lanes=lanes))
+    return bool((out == symbols).all())
+
+
+def ans_ratio_estimate(exp_plane: jax.Array) -> jax.Array:
+    """Predicted ANS bits/symbol from the quantized table (cross-entropy).
+
+    Matches the real coder to within the per-lane flush overhead; used by
+    benchmarks on large tensors where running the scan coder is slow.
+    """
+    counts = jnp.bincount(exp_plane.astype(jnp.int32).reshape(-1), length=NSYM)
+    table = build_freq_table(exp_plane)
+    p = counts / jnp.maximum(counts.sum(), 1)
+    q = table.freq.astype(jnp.float32) / M
+    return -jnp.sum(jnp.where(p > 0, p * jnp.log2(q), 0.0))

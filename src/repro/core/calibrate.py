@@ -1,0 +1,129 @@
+"""Width calibration for the static in-collective codec (paper §3.4).
+
+The paper amortizes ANS-table metadata by observing that float tensor
+distributions are *stable across training steps* (Fig. 12), transmitting the
+table once and reusing it.  We push the same observation one level deeper:
+the packed-width ``W`` and exception capacity are chosen *offline* (or on
+the first steps) from observed exponent statistics, then baked into the
+compiled step as static wire sizes.  Periodic revalidation detects drift;
+the in-wire ``overflow`` flag catches violations exactly (packing.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec, packing
+
+
+@dataclasses.dataclass(frozen=True)
+class WidthChoice:
+    width: int
+    exc_frac: float
+    est_exc_rate: float  # fraction of blocks expected to escape
+    est_ratio: float  # predicted wire ratio vs raw
+    entropy_bits: float  # ANS floor for reference
+
+
+def block_range_stats(x: jax.Array, block: int = 512) -> jax.Array:
+    """Per-block max code values under the zero-escape mapping (int32):
+    ``max_nz - min_nz + 1`` over nonzero exponents (0 for all-zero blocks).
+    A block packs losslessly at width W iff its stat < 2**W."""
+    exp, _ = codec.split_planes(x)
+    exp = packing._pad_to(exp, block)
+    b = exp.reshape(-1, block)
+    nz = b != 0
+    base = jnp.min(jnp.where(nz, b, jnp.uint8(255)), axis=-1).astype(jnp.int32)
+    mx = jnp.max(jnp.where(nz, b, jnp.uint8(0)), axis=-1).astype(jnp.int32)
+    return jnp.where(jnp.any(nz, axis=-1), mx - base + 1, 0)
+
+
+def choose_width(
+    x: jax.Array,
+    *,
+    block: int = 512,
+    target_exc_rate: float = 1e-3,
+    margin_bits: int = 0,
+    max_exc_frac: float = 0.02,
+) -> WidthChoice:
+    """Smallest W such that the expected escape rate stays under target.
+
+    ``margin_bits`` adds headroom for distribution drift between calibration
+    and use (the paper's stability claim says drift is small; we don't rely
+    on it for correctness, only for speed).
+    """
+    lay = codec.layout_of(x.dtype)
+    rngs = np.asarray(block_range_stats(x, block=block))
+    exp, _ = codec.split_planes(x)
+    ent = float(codec.exponent_entropy_bits(exp, lay.exp_bits))
+    n_blocks = len(rngs)
+    best = None
+    for w in range(1, lay.exp_bits + 1):
+        exc_rate = float(np.mean(rngs >= (1 << w)))
+        if exc_rate <= target_exc_rate or w == lay.exp_bits:
+            w_use = min(w + margin_bits, lay.exp_bits)
+            exc_rate = float(np.mean(rngs >= (1 << w_use)))
+            cap = packing.exception_capacity(n_blocks, max_exc_frac)
+            ratio = (
+                lay.lo_bits
+                + w_use
+                + 8.0 / block  # bases
+                + (cap * (4 + block) * 8.0) / (n_blocks * block)  # exceptions
+            ) / lay.total_bits
+            best = WidthChoice(
+                width=w_use,
+                exc_frac=max_exc_frac,
+                est_exc_rate=exc_rate,
+                est_ratio=ratio,
+                entropy_bits=ent,
+            )
+            break
+    assert best is not None
+    return best
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionProfile:
+    """Calibrated parameters per tensor class, reusable across steps.
+
+    Tensor classes follow the paper's Table 1: gradients / weights /
+    activations have distinct but individually-stable distributions.
+    """
+
+    widths: dict  # class name -> width
+    block: int = 512
+    exc_frac: float = 0.02
+    # extra exponent-width headroom for the all-gather phase of the two-shot
+    # (the reduced-sum distribution); 0 = trust exceptions, calibratable.
+    ag_extra_bits: int = 0
+
+    @staticmethod
+    def default(dtype_name: str = "bfloat16") -> "CompressionProfile":
+        # Conservative defaults validated on normalized-tensor workloads;
+        # per-run calibration (calibrate_tree) overrides them.
+        base = {"bfloat16": 5, "float32": 5, "float16": 4,
+                "float8_e4m3fn": 4, "float8_e5m2": 4}[dtype_name]
+        return CompressionProfile(
+            widths={"gradient": base, "weight": base, "activation": base}
+        )
+
+    def width_for(self, tensor_class: str) -> int:
+        return self.widths.get(tensor_class, max(self.widths.values()))
+
+
+def calibrate_tree(
+    tree, *, tensor_class: str = "gradient", block: int = 512, **kw
+) -> CompressionProfile:
+    """Calibrate one width per tensor class from a pytree of live tensors
+    (e.g. the first step's gradients)."""
+    leaves = [l for l in jax.tree_util.tree_leaves(tree) if hasattr(l, "dtype")]
+    widths = [
+        choose_width(l, block=block, **kw).width
+        for l in leaves
+        if jnp.dtype(l.dtype).name in codec.LAYOUTS
+    ]
+    w = max(widths) if widths else 8
+    return CompressionProfile(widths={tensor_class: w}, block=block)

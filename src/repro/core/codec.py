@@ -1,0 +1,150 @@
+"""Bit-plane split/merge for floating-point tensors (paper §2.1.2, Step 1).
+
+Every float is decomposed into
+  - the *exponent plane*  (narrow, skewed distribution -> compressible), and
+  - the *lo plane*        (sign + mantissa, near-uniform -> transmitted raw).
+
+Formats (paper §4.1): float32, float16, bfloat16, float8_e4m3fn, float8_e5m2.
+For fp8 formats the paper packs two exponent fields per byte for
+byte-granular split-stage writes; :func:`pack_fp8_exp_pairs` mirrors that on
+the raw-wire path.  The block packer (packing.py) consumes the *unpacked*
+uint8 exponent stream.
+
+All functions are pure jnp, shape-static, and exactly invertible (bit-exact,
+including NaN payloads and infinities): ``merge(split(x)) == x`` bitwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatLayout:
+    """Bit layout of a supported floating-point format."""
+
+    name: str
+    dtype: jnp.dtype
+    total_bits: int
+    exp_bits: int
+    mant_bits: int  # mantissa (fraction) bits; sign is always 1
+
+    @property
+    def lo_bits(self) -> int:  # sign + mantissa
+        return 1 + self.mant_bits
+
+    @property
+    def uint_dtype(self):
+        return {8: jnp.uint8, 16: jnp.uint16, 32: jnp.uint32}[self.total_bits]
+
+
+LAYOUTS: dict[str, FloatLayout] = {
+    "float32": FloatLayout("float32", jnp.float32, 32, 8, 23),
+    "float16": FloatLayout("float16", jnp.float16, 16, 5, 10),
+    "bfloat16": FloatLayout("bfloat16", jnp.bfloat16, 16, 8, 7),
+    "float8_e4m3fn": FloatLayout("float8_e4m3fn", jnp.float8_e4m3fn, 8, 4, 3),
+    "float8_e5m2": FloatLayout("float8_e5m2", jnp.float8_e5m2, 8, 5, 2),
+}
+
+
+def layout_of(dtype) -> FloatLayout:
+    name = jnp.dtype(dtype).name
+    if name not in LAYOUTS:
+        raise ValueError(f"unsupported dtype for codec: {name}")
+    return LAYOUTS[name]
+
+
+def split_planes(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Split ``x`` (any shape) into ``(exp_plane, lo_plane)``.
+
+    exp_plane: uint8 (N,), one exponent field per element.
+    lo_plane:  uint of the element width (N,), holding ``sign << mant_bits |
+               mantissa`` — i.e. the sign bit relocated adjacent to the
+               mantissa so every lo value fits in ``lo_bits`` bits and the
+               wire layer can bit-pack it densely (one memory pass — Step 1).
+    """
+    lay = layout_of(x.dtype)
+    flat = x.reshape(-1)
+    bits = jax.lax.bitcast_convert_type(flat, lay.uint_dtype)
+    u = lay.uint_dtype
+    mant_mask = u((1 << lay.mant_bits) - 1)
+    exp = (
+        (bits >> u(lay.mant_bits)) & u((1 << lay.exp_bits) - 1)
+    ).astype(jnp.uint8)
+    sign = bits >> u(lay.total_bits - 1)
+    lo = (sign << u(lay.mant_bits)) | (bits & mant_mask)
+    return exp, lo
+
+
+def merge_planes(
+    exp: jax.Array, lo: jax.Array, dtype, shape: tuple[int, ...]
+) -> jax.Array:
+    """Exact inverse of :func:`split_planes`."""
+    lay = layout_of(dtype)
+    n = int(np.prod(shape)) if shape else 1
+    u = lay.uint_dtype
+    lo = lo.reshape(-1)[:n].astype(u)
+    exp = exp.reshape(-1)[:n].astype(u)
+    sign = lo >> u(lay.mant_bits)
+    mant = lo & u((1 << lay.mant_bits) - 1)
+    bits = (sign << u(lay.total_bits - 1)) | (exp << u(lay.mant_bits)) | mant
+    return jax.lax.bitcast_convert_type(bits, lay.dtype).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# fp8 exponent pair packing (paper §4.1: "pack two FP8 values into a single
+# 16-bit unit and jointly extract their exponent fields").
+# ---------------------------------------------------------------------------
+
+def pack_fp8_exp_pairs(exp: jax.Array, exp_bits: int) -> jax.Array:
+    """Pack two fp8 exponent fields per lane (uint8 for e4m3, uint16 for e5m2)."""
+    n = exp.shape[0]
+    if n % 2:
+        exp = jnp.concatenate([exp, jnp.zeros((1,), jnp.uint8)])
+    e2 = exp.reshape(-1, 2)
+    if exp_bits <= 4:
+        return (e2[:, 0] | (e2[:, 1] << jnp.uint8(exp_bits))).astype(jnp.uint8)
+    pk = e2[:, 0].astype(jnp.uint16) | (
+        e2[:, 1].astype(jnp.uint16) << jnp.uint16(exp_bits)
+    )
+    return jax.lax.bitcast_convert_type(pk, jnp.uint8).reshape(-1)
+
+
+def unpack_fp8_exp_pairs(packed: jax.Array, exp_bits: int, n: int) -> jax.Array:
+    """Inverse of :func:`pack_fp8_exp_pairs`; returns uint8 (n,)."""
+    mask = (1 << exp_bits) - 1
+    if exp_bits <= 4:
+        lo_e = packed & jnp.uint8(mask)
+        hi_e = (packed >> jnp.uint8(exp_bits)) & jnp.uint8(mask)
+    else:
+        p16 = jax.lax.bitcast_convert_type(packed.reshape(-1, 2), jnp.uint16)
+        p16 = p16.reshape(-1)
+        lo_e = (p16 & jnp.uint16(mask)).astype(jnp.uint8)
+        hi_e = ((p16 >> jnp.uint16(exp_bits)) & jnp.uint16(mask)).astype(jnp.uint8)
+    return jnp.stack([lo_e, hi_e], axis=-1).reshape(-1)[:n]
+
+
+# ---------------------------------------------------------------------------
+# Plane-size accounting (used by the policy + roofline + benchmarks).
+# ---------------------------------------------------------------------------
+
+def plane_fractions(dtype) -> tuple[float, float]:
+    """(uncompressed_fraction, compressible_fraction) of the raw size.
+
+    Paper Property 2: bf16 -> (0.5, 0.5); f32 -> (0.75, 0.25).
+    """
+    lay = layout_of(dtype)
+    return lay.lo_bits / lay.total_bits, lay.exp_bits / lay.total_bits
+
+
+def exponent_entropy_bits(exp_plane: jax.Array, exp_bits: int) -> jax.Array:
+    """Empirical entropy (bits/symbol) of an exponent plane — the floor any
+    entropy coder (the paper's ANS) can reach.  Used by calibrate + benchmarks.
+    """
+    nsym = 1 << exp_bits
+    counts = jnp.bincount(exp_plane.astype(jnp.int32).reshape(-1), length=nsym)
+    p = counts / jnp.maximum(counts.sum(), 1)
+    return -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.where(p > 0, p, 1.0)), 0.0))

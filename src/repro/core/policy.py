@@ -1,0 +1,72 @@
+"""Selective-compression policy (paper §3.4, "Selective compression across
+collective stages" + §5.1 ">1 MB only").
+
+Decides, per (tensor, wire), whether compression is applied:
+  * size threshold  — compression is enabled only for messages larger than
+    ``min_bytes`` (paper: 1 MB; below it overhead dominates);
+  * dtype gate      — only codec-supported float formats;
+  * wire gate       — compress cross-pod (DCN) and data-parallel ICI wires;
+    leave small latency-bound TP activation collectives raw (the paper's
+    NVLink negative result, avoided by construction);
+  * stage gate      — in multi-step collectives only remote data is
+    compressed/decompressed; local contributions stay raw.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec
+from repro.core.calibrate import CompressionProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionPolicy:
+    enabled: bool = True
+    min_bytes: int = 1 << 20  # paper: 1 MB threshold
+    compress_axes: tuple = ("data", "pod")  # DP/DCN wires
+    raw_axes: tuple = ("model",)  # TP/EP activation wires default raw
+    profile: CompressionProfile = dataclasses.field(
+        default_factory=lambda: CompressionProfile.default()
+    )
+    # collective algorithm for all-reduce: "two_shot" (paper's recommended)
+    # or "ring" (paper's negative baseline)
+    allreduce_algorithm: str = "two_shot"
+
+    def should_compress(
+        self, x, axis_name: str, *, tensor_class: str = "gradient"
+    ) -> bool:
+        if not self.enabled:
+            return False
+        if jnp.dtype(x.dtype).name not in codec.LAYOUTS:
+            return False
+        nbytes = int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        if nbytes < self.min_bytes:
+            return False
+        names = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+        return all(n in self.compress_axes for n in names)
+
+    def width_for(self, tensor_class: str) -> int:
+        return self.profile.width_for(tensor_class)
+
+    @staticmethod
+    def disabled() -> "CompressionPolicy":
+        return CompressionPolicy(enabled=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class WireReport:
+    """Accounting record emitted by compressed collectives for the roofline."""
+
+    name: str
+    axis: str
+    raw_bytes: int
+    wire_bytes: int
+
+    @property
+    def ratio(self) -> float:
+        return self.wire_bytes / max(self.raw_bytes, 1)

@@ -1,0 +1,166 @@
+"""Split-send P2P pipeline (paper §3.2, Fig. 4d) on TPU collective-permute.
+
+The paper's observation: after the cheap split stage, the lo plane (sign +
+mantissa — half of a bf16 tensor, 3/4 of f32) is *final* and can hit the
+wire immediately, overlapping with the compute-heavy exponent encode.
+
+On TPU the same overlap is obtained structurally: the lo-plane
+``collective_permute`` has **no data dependence** on the exponent-encode
+ops, so XLA's latency-hiding scheduler issues it while the VPU packs
+exponents.  The naive *encode-send* baseline (paper Fig. 4a) is expressed
+with an ``optimization_barrier`` that forces the lo transfer to wait for
+the full encode — exactly the serialization the paper ascribes to naive
+designs.  The *chunked pipeline* baseline (Fig. 4b/c) splits the tensor
+into C chunks, each fully encoded then sent, chained with barriers.
+
+All three return bit-identical tensors; they differ only in the lowered
+schedule (benchmarks/fig15_strategies.py derives the overlap windows, and
+tests assert the HLO dependence structure).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec, packing
+from repro.core.compressed_collectives import (
+    _decode_chunks,
+    _encode_chunks,
+    _pad_flat,
+)
+from repro.core.policy import CompressionPolicy
+
+
+def _permute(a, axis_name, perm):
+    return jax.lax.ppermute(a, axis_name, perm)
+
+
+def split_send(
+    x: jax.Array, axis_name, perm, *, width: int, block: int = 512,
+    exc_frac: float = 0.02,
+):
+    """Split-send pipeline: lo plane transfers while exponents encode.
+
+    Returns (received tensor, overflow_flag)."""
+    lay = codec.layout_of(x.dtype)
+    n = int(np.prod(x.shape))
+    xf = _pad_flat(x.reshape(-1), block)
+    exp, lo = codec.split_planes(xf)
+
+    # Stage A (early transmission): the lo plane is final after the split —
+    # pack to lo_bits and put it on the wire with NO dependence on stage B.
+    lo_planes = packing.bitplane_pack(
+        packing._pad_to(lo.astype(jnp.uint32), packing.GROUP, "zero"), lay.lo_bits
+    )
+    lo_recv = _permute(lo_planes, axis_name, perm)
+
+    # Stage B (overlapped): block-pack the exponent plane, then transfer.
+    pk = packing.pack_exponents(exp, width=width, block=block, exc_frac=exc_frac)
+    exp_wire = {
+        "payload": pk.payload, "bases": pk.bases, "exc_idx": pk.exc_idx,
+        "exc_raw": pk.exc_raw, "overflow": pk.overflow,
+    }
+    exp_recv = jax.tree.map(lambda a: _permute(a, axis_name, perm), exp_wire)
+
+    # Receiver: decode (the split's inverse is a pure bit-merge).
+    rpk = packing.PackedPlane(
+        payload=exp_recv["payload"], bases=exp_recv["bases"],
+        exc_idx=exp_recv["exc_idx"], exc_raw=exp_recv["exc_raw"],
+        overflow=exp_recv["overflow"], width=width, block=block,
+        n=xf.shape[0], exp_bits=lay.exp_bits,
+    )
+    exp_out = packing.unpack_exponents(rpk)
+    lo_out = packing.bitplane_unpack(lo_recv, lay.lo_bits)[: xf.shape[0]].astype(
+        lay.uint_dtype
+    )
+    out = codec.merge_planes(exp_out, lo_out, lay.dtype, (xf.shape[0],))
+    return out[:n].reshape(x.shape), exp_recv["overflow"]
+
+
+def encode_send(
+    x: jax.Array, axis_name, perm, *, width: int, block: int = 512,
+    exc_frac: float = 0.02,
+):
+    """Naive baseline (paper Fig. 4a): transmit only after FULL compression.
+
+    The ``optimization_barrier`` ties the lo-plane transfer to the encoded
+    exponent payload, forcing the serialization the paper measures."""
+    lay = codec.layout_of(x.dtype)
+    n = int(np.prod(x.shape))
+    xf = _pad_flat(x.reshape(-1), block)
+    exp, lo = codec.split_planes(xf)
+    lo_planes = packing.bitplane_pack(
+        packing._pad_to(lo.astype(jnp.uint32), packing.GROUP, "zero"), lay.lo_bits
+    )
+    pk = packing.pack_exponents(exp, width=width, block=block, exc_frac=exc_frac)
+    # serialize: nothing ships until the whole message is encoded
+    lo_planes, payload = jax.lax.optimization_barrier((lo_planes, pk.payload))
+    lo_recv = _permute(lo_planes, axis_name, perm)
+    wire = {
+        "payload": payload, "bases": pk.bases, "exc_idx": pk.exc_idx,
+        "exc_raw": pk.exc_raw, "overflow": pk.overflow,
+    }
+    del pk  # barriered payload is the only one that may ship
+    recv = jax.tree.map(lambda a: _permute(a, axis_name, perm), wire)
+    rpk = packing.PackedPlane(
+        payload=recv["payload"], bases=recv["bases"], exc_idx=recv["exc_idx"],
+        exc_raw=recv["exc_raw"], overflow=recv["overflow"], width=width,
+        block=block, n=xf.shape[0], exp_bits=lay.exp_bits,
+    )
+    exp_out = packing.unpack_exponents(rpk)
+    lo_out = packing.bitplane_unpack(lo_recv, lay.lo_bits)[: xf.shape[0]].astype(
+        lay.uint_dtype
+    )
+    out = codec.merge_planes(exp_out, lo_out, lay.dtype, (xf.shape[0],))
+    return out[:n].reshape(x.shape), recv["overflow"]
+
+
+def chunked_pipeline_send(
+    x: jax.Array, axis_name, perm, *, width: int, chunks: int = 4,
+    block: int = 512, exc_frac: float = 0.02,
+):
+    """Chunk-based pipelining baseline (paper Fig. 4b/c): C chunks, each
+    fully encoded then sent, chained so chunk k+1's encode waits on chunk
+    k's send being issued.  The paper shows this LOSES on GPUs because
+    compression latency is sub-linear in size (Property 1); on TPU the
+    analogous cost is per-chunk kernel/collective overhead and worse
+    VPU utilization at small block counts."""
+    n = int(np.prod(x.shape))
+    xf = _pad_flat(x.reshape(-1), chunks * block)
+    parts = xf.reshape(chunks, -1)
+    outs, flag = [], jnp.int32(0)
+    token = None
+    for k in range(chunks):
+        part = parts[k]
+        if token is not None:  # chain: serialize chunk pipeline stages
+            part, _ = jax.lax.optimization_barrier((part, token))
+        got, f = encode_send(
+            part, axis_name, perm, width=width, block=block, exc_frac=exc_frac
+        )
+        token = got
+        outs.append(got)
+        flag = jnp.maximum(flag, f)
+    out = jnp.concatenate(outs)[:n].reshape(x.shape)
+    return out, flag
+
+
+def p2p_send(
+    x: jax.Array, axis_name, perm, *, policy: CompressionPolicy,
+    tensor_class: str = "weight", strategy: str = "split_send",
+):
+    """Policy-gated P2P entry point (RL weight sync, KV-cache transfer)."""
+    if not policy.should_compress(x, axis_name, tensor_class=tensor_class):
+        from repro.core.compressed_collectives import raw_ppermute
+        return raw_ppermute(x, axis_name, perm), jnp.int32(0)
+    fn = {
+        "split_send": split_send,
+        "encode_send": encode_send,
+        "chunked": chunked_pipeline_send,
+    }[strategy]
+    return fn(
+        x, axis_name, perm, width=policy.width_for(tensor_class),
+        block=policy.profile.block, exc_frac=policy.profile.exc_frac,
+    )

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose/bit-exact targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codec, packing
+
+# --- bitpack -----------------------------------------------------------------
+
+def pack(vals: jax.Array, width: int) -> jax.Array:
+    return packing.bitplane_pack(vals, width)
+
+
+def unpack(packed: jax.Array, width: int) -> jax.Array:
+    return packing.bitplane_unpack(packed, width)
+
+
+# --- plane_split -------------------------------------------------------------
+
+def split_with_stats(x: jax.Array, block: int = 512):
+    exp, lo = codec.split_planes(x)
+    b = exp.reshape(-1, block).astype(jnp.uint32)
+    base = jnp.min(b, axis=-1)
+    rng = jnp.max(b, axis=-1) - base
+    return exp.astype(jnp.uint32), lo.astype(jnp.uint32), base, rng
+
+
+# --- decode_reduce -----------------------------------------------------------
+
+def decode_reduce(payload, lo_planes, group_bases, acc, dtype_name: str, width: int):
+    lay = codec.LAYOUTS[dtype_name]
+    resid = packing.bitplane_unpack(payload, width)
+    exp = (
+        resid.reshape(group_bases.shape[0], packing.GROUP)
+        + group_bases[:, None]
+    ).reshape(-1).astype(jnp.uint8)
+    lo = packing.bitplane_unpack(lo_planes, lay.lo_bits).astype(lay.uint_dtype)
+    vals = codec.merge_planes(exp, lo, lay.dtype, (resid.shape[0],))
+    return acc.reshape(-1) + vals.astype(jnp.float32)
+
+
+# --- rans (dense-emission formulation; mirrors kernels/rans.py exactly) ------
+
+PROB_BITS = 12
+M = 1 << PROB_BITS
+RANS_L = 1 << 16
+
+
+def rans_encode(syms: jax.Array, freq: jax.Array, cum: jax.Array):
+    per, lanes = syms.shape
+
+    def body(carry, r):
+        state = carry
+        s = syms[r]
+        f = freq[s]
+        c = cum[s]
+        x_max = ((jnp.uint32(RANS_L) >> jnp.uint32(PROB_BITS)) << jnp.uint32(16)) * f
+        need = state >= x_max
+        word = jnp.where(need, state & jnp.uint32(0xFFFF), jnp.uint32(0))
+        state = jnp.where(need, state >> jnp.uint32(16), state)
+        q = state // f
+        state = (q << jnp.uint32(PROB_BITS)) + (state - q * f) + c
+        return state, (word, need.astype(jnp.uint32))
+
+    state0 = jnp.full((lanes,), jnp.uint32(RANS_L))
+    state, (words, mask) = jax.lax.scan(
+        body, state0, jnp.arange(per - 1, -1, -1)
+    )
+    # scan visited rows in reverse; restore row order
+    return words[::-1], mask[::-1], state
+
+
+def rans_decode(words, state, freq, cum, s2s):
+    per, lanes = words.shape
+
+    def body(carry, r):
+        st = carry
+        slot = st & jnp.uint32(M - 1)
+        sym = s2s[slot]
+        f = freq[sym]
+        c = cum[sym]
+        st = f * (st >> jnp.uint32(PROB_BITS)) + slot - c
+        need = st < jnp.uint32(RANS_L)
+        st = jnp.where(need, (st << jnp.uint32(16)) | words[r], st)
+        return st, sym
+
+    _, syms = jax.lax.scan(body, state, jnp.arange(per))
+    return syms

@@ -1,0 +1,53 @@
+"""Model registry: arch name -> (config, model fns, input builders)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import transformer
+from repro.models.config import ArchConfig
+
+
+def get_config(name: str, smoke: bool = False) -> ArchConfig:
+    return configs.get_smoke(name) if smoke else configs.get(name)
+
+
+def make_batch(cfg: ArchConfig, batch: int, seq: int, *, rng=None):
+    """Concrete training batch (smoke tests / examples)."""
+    rng = rng or np.random.default_rng(0)
+    b = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32),
+    }
+    if cfg.enc_dec:
+        b["frames"] = jnp.asarray(
+            rng.normal(0, 1, (batch, cfg.enc_seq, cfg.d_model)), jnp.dtype(cfg.dtype)
+        )
+    if cfg.frontend == "vision_stub":
+        sv = max(1, seq // 4)
+        b["vision_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (batch, sv, cfg.d_model)), jnp.dtype(cfg.dtype)
+        )
+    return b
+
+
+def batch_specs(cfg: ArchConfig, batch: int, seq: int):
+    """ShapeDtypeStruct stand-ins for every model input (dry-run: no alloc)."""
+    s = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.enc_dec:
+        s["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    if cfg.frontend == "vision_stub":
+        s["vision_embeds"] = jax.ShapeDtypeStruct(
+            (batch, max(1, seq // 4), cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    return s
+
+
+model = transformer  # module-level alias: init / specs / forward / decode_step

@@ -1,0 +1,217 @@
+"""Compressed FSDP (ZeRO-3): parameters sharded over the DP axes, gathered
+on demand with the *compressed all-gather* and grad-synced by the transpose
+*compressed reduce-scatter* (DESIGN.md §8, beyond-paper).
+
+Why this exists: deepseek-v3-671b (1.34 TB bf16), qwen2-vl-72b and
+jamba-52b cannot keep ZeRO-1-replicated parameters on 16 GB chips at
+``model=16``; their configs opt into FSDP.  The parameter all-gather is a
+*weight transfer* — exactly the tensor class whose compression the paper
+demonstrates on the RL weight-sync path (Table 1: bf16 weights ≈ 0.675) —
+so the FSDP wire is compressed with the weight-class width and the backward
+reduce-scatter with the gradient-class width.
+
+Mechanics:
+  * a leaf is FSDP-*sharded* iff its last dim divides ``n_dp``, its payload
+    is ≥ ``min_shard_bytes`` and its dtype is codec-supported; other leaves
+    stay replicated over DP (their grads are psum'd by the caller);
+  * sharded leaves are stored as the local last-dim slice; ``gather_leaf``
+    is a ``jax.custom_vjp``: forward = compressed all-gather (+ overflow
+    flag surfaced as an auxiliary output), backward = compressed
+    reduce-scatter of the cotangent (the DP gradient mean);
+  * losslessness: both wires carry the exception region, so any block is
+    exact unless exception *capacity* overflows; forward overflow is
+    surfaced per step, backward overflow is covered by calibration margin +
+    periodic revalidation (DESIGN.md §7.1 honesty note).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache, partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec
+from repro.core.compressed_collectives import (
+    all_gather_compressed,
+    reduce_scatter_compressed,
+    _pad_flat,
+)
+from repro.core.policy import CompressionPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class FsdpPlan:
+    """Static per-leaf decision: True = sharded on last dim over dp_axes."""
+
+    mask_leaves: tuple  # booleans, aligned with tree_leaves order
+    n_dp: int
+    min_shard_bytes: int = 1 << 20
+
+
+def plan_fsdp(params, n_dp: int, *, min_shard_bytes: int = 1 << 20) -> FsdpPlan:
+    leaves = jax.tree_util.tree_leaves(params)
+    mask = []
+    for l in leaves:
+        ok = (
+            l.ndim >= 1
+            and l.shape[-1] % n_dp == 0
+            and int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize >= min_shard_bytes
+            and jnp.dtype(l.dtype).name in codec.LAYOUTS
+        )
+        mask.append(bool(ok))
+    return FsdpPlan(tuple(mask), n_dp, min_shard_bytes)
+
+
+def mask_tree(plan: FsdpPlan, tree):
+    """Rebuild the boolean mask as a pytree shaped like ``tree``."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return jax.tree_util.tree_unflatten(treedef, list(plan.mask_leaves))
+
+
+def shard_leaf(leaf, n_dp: int, idx):
+    """Slice the last dim: leaf (..., F) -> (..., F/n_dp) for DP rank idx."""
+    F = leaf.shape[-1]
+    sl = F // n_dp
+    return jax.lax.dynamic_slice_in_dim(leaf, idx * sl, sl, axis=leaf.ndim - 1)
+
+
+def shard_tree(plan: FsdpPlan, tree, idx):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out = [
+        shard_leaf(l, plan.n_dp, idx) if m else l
+        for l, m in zip(leaves, plan.mask_leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def shard_tree_by_plan(plan_tree, tree, idx, n_dp: int):
+    """Shard per the train-step plan (pytree of dims, -1 = replicated)."""
+    def f(l, d):
+        if d < 0:
+            return l
+        sl = l.shape[d] // n_dp
+        return jax.lax.dynamic_slice_in_dim(l, idx * sl, sl, axis=d)
+    return jax.tree.map(f, tree, plan_tree)
+
+
+# ---------------------------------------------------------------------------
+# compressed gather with custom VJP (the FSDP wire)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _make_gather(axes: tuple, w_fwd: int, w_bwd: int, block: int,
+                 exc_frac: float, compressed: bool,
+                 local_shape: tuple = None, dtype_name: str = None):
+    """Factory: custom-vjp'd last-dim all-gather over manual ``axes``.
+
+    ``local_shape``/``dtype_name`` are part of the cache key so the VJP can
+    reconstruct the shard without carrying non-JAX residuals."""
+    local_shape = tuple(local_shape)
+    dtype = jnp.dtype(dtype_name)
+
+    def n_dp():
+        return int(np.prod([jax.lax.axis_size(a) for a in axes]))
+
+    def ag(local):  # (..., f) -> (..., f * n_dp)
+        nd = n_dp()
+        flat = local.reshape(-1)  # row-major: last dim minor
+        if compressed:
+            stacked, flag = all_gather_compressed(
+                flat, tuple(axes), width=w_fwd, block=block, exc_frac=exc_frac
+            )
+            stacked = stacked[:, : flat.shape[0]]
+        else:
+            stacked = _raw_ag(flat, axes)
+            flag = jnp.int32(0)
+        # (n_dp, ..., f) -> (..., n_dp, f) -> (..., n_dp * f)
+        stacked = stacked.reshape((nd,) + local.shape)
+        perm = tuple(range(1, local.ndim)) + (0, local.ndim)
+        full = stacked.transpose(perm).reshape(
+            local.shape[:-1] + (nd * local.shape[-1],)
+        )
+        return full.astype(local.dtype), flag
+
+    def rs(ct_full):  # cotangent (..., F) -> (..., f)
+        nd = n_dp()
+        f = local_shape[-1]
+        # (..., nd, f) -> (nd, ..., f) -> flat rows per destination
+        ct = ct_full.reshape(local_shape[:-1] + (nd, f))
+        perm = (ct.ndim - 2,) + tuple(range(ct.ndim - 2)) + (ct.ndim - 1,)
+        rows = ct.transpose(perm).reshape(nd, -1)
+        ln = rows.shape[1]
+        # pad each destination row to a block multiple BEFORE flattening so
+        # the wire's (n_dev, chunk) reshape lands on destination boundaries
+        ln_pad = -(-ln // block) * block
+        if ln_pad > ln:
+            rows = jnp.concatenate(
+                [rows, jnp.zeros((nd, ln_pad - ln), rows.dtype)], axis=1
+            )
+        if compressed:
+            red, _ = reduce_scatter_compressed(
+                rows.reshape(-1).astype(dtype), tuple(axes), width=w_bwd,
+                block=block, exc_frac=exc_frac,
+            )
+            red = red[:ln]
+        else:
+            red = _raw_rs(rows.astype(dtype), axes)[:ln]
+        # NOTE: transpose of "replicate my shard to all DP ranks" is SUM over
+        # ranks; the 1/n_dp mean scaling is the loss function's job.
+        return red.reshape(local_shape).astype(dtype)
+
+    @jax.custom_vjp
+    def gather(local):
+        return ag(local)
+
+    def fwd(local):
+        return ag(local), None
+
+    def bwd(res, cts):
+        ct_full, _ct_flag = cts
+        return (rs(ct_full),)
+
+    gather.defvjp(fwd, bwd)
+    return gather
+
+
+def _raw_ag(flat, axes):
+    from repro.core.compressed_collectives import raw_all_gather
+    return raw_all_gather(flat[None], tuple(axes), axis=0, tiled=True)
+
+
+def _raw_rs(rows, axes):
+    """Raw reduce-scatter as all_to_all + local sum (wire-byte-identical to
+    native RS; bitcast wire avoids XLA-CPU bf16 promotion/crash)."""
+    from repro.core.compressed_collectives import raw_all_to_all
+    recv = raw_all_to_all(rows, tuple(axes), 0, 0)
+    return jnp.sum(recv.astype(jnp.float32), axis=0).astype(rows.dtype)
+
+
+def gather_tree(plan: FsdpPlan, tree, *, dp_axes, policy: CompressionPolicy):
+    """Gather all FSDP-sharded leaves of ``tree``.  Returns (full_tree, flag).
+
+    Differentiable: d(gather)/d(local) is the compressed reduce-scatter, so
+    ``jax.grad`` through this produces DP-reduced sharded gradients."""
+    axes = tuple(dp_axes) if isinstance(dp_axes, (tuple, list)) else (dp_axes,)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    flag = jnp.int32(0)
+    out = []
+    for l, m in zip(leaves, plan.mask_leaves):
+        if not m:
+            out.append(l)
+            continue
+        gfn = _make_gather(
+            axes,
+            policy.width_for("weight") if policy.enabled else 8,
+            policy.width_for("gradient") if policy.enabled else 8,
+            policy.profile.block,
+            policy.profile.exc_frac,
+            policy.enabled,
+            tuple(l.shape), jnp.dtype(l.dtype).name,
+        )
+        full, f = gfn(l)
+        flag = jnp.maximum(flag, jax.lax.stop_gradient(f))
+        out.append(full)
+    return jax.tree_util.tree_unflatten(treedef, out), flag

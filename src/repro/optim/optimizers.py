@@ -1,0 +1,175 @@
+"""Optimizers: AdamW and Adafactor as pure pytree transforms.
+
+Both are written flat-bucket-friendly: ``init``/``update`` operate on any
+pytree (including the 1-D flat buckets the ZeRO-1 shard owns), carry their
+hyper-parameters in a frozen config, and keep first/second moments in the
+dtypes the big-config memory budgets require (DESIGN.md §9: Adafactor with
+factored bf16 second moments for deepseek-v3-671b).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimConfig:
+    name: str = "adamw"  # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # adafactor
+    decay_rate: float = 0.8
+    factored_min_dim: int = 128
+
+
+def lr_at(cfg: OptimConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to ``min_lr_frac * lr``."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float, *, pre_norm: Optional[jax.Array] = None):
+    g = pre_norm if pre_norm is not None else global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return jax.tree.map(lambda l: (l.astype(jnp.float32) * scale).astype(l.dtype), tree), g
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params):
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: OptimConfig, grads, state, params):
+    """Returns (new_params, new_state).  Grads/params: matching pytrees."""
+    c = state["count"] + 1
+    lr = lr_at(cfg, c)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** c.astype(jnp.float32)
+    bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh, vh = m / bc1, v / bc2
+        step = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    flat_p = tdef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": c}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; memory ~ O(n+m) instead of O(nm))
+# ---------------------------------------------------------------------------
+
+def _factored(shape, min_dim) -> bool:
+    return len(shape) >= 2 and shape[-1] >= min_dim and shape[-2] >= min_dim
+
+
+def adafactor_init(params, *, min_dim: int = 128):
+    def one(p):
+        if _factored(p.shape, min_dim):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "f": jax.tree.map(one, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(cfg: OptimConfig, grads, state, params):
+    c = state["count"] + 1
+    lr = lr_at(cfg, c)
+    beta = 1.0 - c.astype(jnp.float32) ** (-cfg.decay_rate)
+    eps = 1e-30
+
+    def upd(g, f, p):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if "vr" in f:
+            vr = beta * f["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * f["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :] + 1e-12)
+            nf = {"vr": vr, "vc": vc}
+        else:
+            v = beta * f["v"] + (1 - beta) * g2
+            u = g / (jnp.sqrt(v) + 1e-12)
+            nf = {"v": v}
+        # update clipping (Adafactor's RMS-1 rule)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        step = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), nf
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_f = tdef.flatten_up_to(state["f"])
+    flat_p = tdef.flatten_up_to(params)
+    out = [upd(g, f, p) for g, f, p in zip(flat_g, flat_f, flat_p)]
+    return (
+        tdef.unflatten([o[0] for o in out]),
+        {"f": tdef.unflatten([o[1] for o in out]), "count": c},
+    )
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def init(cfg: OptimConfig, params):
+    if cfg.name == "adamw":
+        return adamw_init(params)
+    if cfg.name == "adafactor":
+        return adafactor_init(params, min_dim=cfg.factored_min_dim)
+    raise ValueError(cfg.name)
+
+
+def update(cfg: OptimConfig, grads, state, params):
+    if cfg.name == "adamw":
+        return adamw_update(cfg, grads, state, params)
+    if cfg.name == "adafactor":
+        return adafactor_update(cfg, grads, state, params)
+    raise ValueError(cfg.name)

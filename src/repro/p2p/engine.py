@@ -1,0 +1,286 @@
+"""Host-orchestrated P2P transfer engine with split-send compression.
+
+The paper's UZIP-P2P (built on UCCL-P2P's RDMA write_with_imm) is a
+host-driven pipeline: the GPU splits the tensor, the NIC ships the
+uncompressed plane while the GPU encodes the exponent plane, then the
+(smaller) compressed payload follows.  This module is the framework's
+equivalent for out-of-band transfers (RL weight sync trainer→rollout,
+PD-disaggregated KV shipment): a singleton engine per process with
+GPU(device)-resident staging buffers, an rANS or packed-width codec for the
+exponent plane, metadata management (dtype, pre/post sizes — the paper's
+write_with_imm metadata extension), and a wire-time model for the
+assignment's link constants so benchmarks can report deterministic
+throughput numbers alongside wall-clock CPU timings.
+
+Pipeline timing model (paper Fig. 4d):
+    T_split_send = T_split + max(T_lo_wire, T_encode) + T_exp_wire
+    T_encode_send = T_split + T_encode + (T_lo_wire + T_exp_wire)
+    T_raw = T_raw_wire
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ans, codec, packing
+from repro.core.calibrate import choose_width
+
+
+@dataclasses.dataclass(frozen=True)
+class WireModel:
+    """First-order link model (assignment constants: ~50 GB/s ICI-class)."""
+    bandwidth: float = 50e9  # bytes/s
+    latency: float = 5e-6  # s per message
+
+    def t(self, nbytes: int, messages: int = 1) -> float:
+        return self.latency * messages + nbytes / self.bandwidth
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecModel:
+    """GPU codec-rate model calibrated to the paper's H200 numbers
+    (Fig. 3: 16 MB ≈ 90 µs, 4 MB ≈ 70 µs — sub-linear: t = t0 + c·n),
+    with the split stage at 14% of total (paper Property 2).
+
+    Benchmarks use this for pipeline TIMING (so the overlap dynamics match
+    the hardware the paper measures) and the CPU wall-clock codec for
+    RATIOS + the sub-linearity measurement (fig3)."""
+    t0: float = 60e-6
+    per_byte: float = (90e-6 - 60e-6) / (16 << 20)
+    split_frac: float = 0.14
+
+    def t_total(self, nbytes: int) -> float:
+        return self.t0 + self.per_byte * nbytes
+
+    def t_split(self, nbytes: int) -> float:
+        return self.split_frac * self.t_total(nbytes)
+
+    def t_encode(self, nbytes: int) -> float:
+        return (1 - self.split_frac) * self.t_total(nbytes)
+
+
+@dataclasses.dataclass
+class Message:
+    """Encoded wire message + metadata (paper §4.1 metadata extension)."""
+    dtype_name: str
+    shape: tuple
+    raw_bytes: int
+    lo_payload: np.ndarray  # bit-packed sign|mantissa plane
+    exp_payload: dict  # codec-dependent
+    codec: str  # "rans" | "packed"
+    width: int = 0
+    t_split: float = 0.0
+    t_encode: float = 0.0
+
+    def wire_bytes(self) -> int:
+        n = self.lo_payload.nbytes
+        if self.codec == "rans":
+            # variable-length: only the USED words ship (+ table + lens)
+            n += self.exp_payload["used_bytes"] + 256 * 12 // 8
+            n += np.asarray(self.exp_payload["lens"]).nbytes
+        else:
+            for k in ("payload", "bases", "exc_idx", "exc_raw"):
+                n += np.asarray(self.exp_payload[k]).nbytes
+        return n + 64  # metadata header
+
+    def ratio(self) -> float:
+        return self.wire_bytes() / self.raw_bytes
+
+
+class Compressor:
+    """Singleton per process (paper §4.1: one compressor per GPU serving the
+    single send/recv thread pair; bounds staging memory)."""
+
+    _instance: Optional["Compressor"] = None
+    _lock = threading.Lock()
+
+    def __init__(self, *, codec_name: str = "packed", lanes: int = 128,
+                 block: int = 512):
+        self.codec_name = codec_name
+        self.lanes = lanes
+        self.block = block
+        self._split = jax.jit(codec.split_planes)
+        self._enc_cache = {}  # (n, dtype, width) -> jitted encode pipeline
+        self._width_cache = {}  # (tensor-class, dtype) -> calibrated width
+        self._table_cache = {}  # tensor-class -> FreqTable (paper: table
+        #                          transmitted once, reused across steps)
+
+    def _packed_pipeline(self, n: int, dtype_name: str, width: int):
+        key = (n, dtype_name, width)
+        fn = self._enc_cache.get(key)
+        if fn is None:
+            lay = codec.LAYOUTS[dtype_name]
+            blk = self.block
+
+            def pipeline(flat):
+                exp, lo = codec.split_planes(flat)
+                lo_packed = packing.bitplane_pack(
+                    packing._pad_to(lo.astype(jnp.uint32), 32, "zero"),
+                    lay.lo_bits)
+                pk = packing.pack_exponents(exp, width=width, block=blk)
+                return lo_packed, pk
+
+            fn = jax.jit(pipeline)
+            self._enc_cache[key] = fn
+        return fn
+
+    @classmethod
+    def instance(cls, **kw) -> "Compressor":
+        with cls._lock:
+            if cls._instance is None:
+                cls._instance = cls(**kw)
+        return cls._instance
+
+    # -- encode ----------------------------------------------------------------
+
+    def encode(self, x, *, tensor_class: str = "weight",
+               reuse_table: bool = True) -> Message:
+        orig_shape = tuple(jnp.asarray(x).shape)
+        arr = jnp.asarray(x).reshape(-1)
+        lay = codec.layout_of(arr.dtype)
+        if self.codec_name == "rans":
+            t0 = time.perf_counter()
+            exp, lo = self._split(arr)
+            lo_packed = packing.bitplane_pack(
+                packing._pad_to(lo.astype(jnp.uint32), 32, "zero"),
+                lay.lo_bits)
+            jax.block_until_ready(lo_packed)
+            t_split = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            key = (tensor_class, lay.name) if reuse_table else None
+            table = self._table_cache.get(key)
+            if table is None:
+                table = ans.build_freq_table(exp)
+                if key is not None:
+                    self._table_cache[key] = table
+            stream = ans.encode(exp, table, lanes=self.lanes)
+            jax.block_until_ready(stream.words)
+            lens = np.asarray(stream.lens)
+            exp_payload = {
+                "words": np.asarray(stream.words),
+                "lens": lens,
+                "freq": np.asarray(table.freq),
+                "n": exp.shape[0],
+                "used_bytes": int(lens.sum()) * 2,
+            }
+            width = 0
+            t_encode = time.perf_counter() - t1
+        else:
+            wkey = (tensor_class, lay.name)
+            width = self._width_cache.get(wkey)
+            if width is None:
+                width = choose_width(arr, block=self.block).width
+                self._width_cache[wkey] = width
+            fn = self._packed_pipeline(arr.shape[0], lay.name, width)
+            lo_packed, pk = fn(arr)  # warm the jit cache
+            t0 = time.perf_counter()
+            lo_packed, pk = fn(arr)
+            jax.block_until_ready(pk.payload)
+            t_total = time.perf_counter() - t0
+            # one fused pipeline: attribute stage times by plane bytes
+            lo_frac = lay.lo_bits / (lay.lo_bits + max(width, 1))
+            t_split = t_total * lo_frac
+            t_encode = t_total * (1 - lo_frac)
+            exp_payload = {
+                "payload": np.asarray(pk.payload),
+                "bases": np.asarray(pk.bases),
+                "exc_idx": np.asarray(pk.exc_idx),
+                "exc_raw": np.asarray(pk.exc_raw),
+                "overflow": int(pk.overflow),
+                "n": arr.shape[0],
+            }
+        return Message(
+            dtype_name=lay.name, shape=orig_shape,
+            raw_bytes=arr.size * lay.total_bits // 8,
+            lo_payload=np.asarray(lo_packed), exp_payload=exp_payload,
+            codec=self.codec_name, width=width,
+            t_split=t_split, t_encode=t_encode,
+        )
+
+    # -- decode ----------------------------------------------------------------
+
+    def decode(self, msg: Message):
+        lay = codec.LAYOUTS[msg.dtype_name]
+        n = int(np.prod(msg.shape)) if msg.shape else 1
+        lo = packing.bitplane_unpack(jnp.asarray(msg.lo_payload),
+                                     lay.lo_bits)[:n].astype(lay.uint_dtype)
+        if msg.codec == "rans":
+            p = msg.exp_payload
+            table = ans.FreqTable(
+                freq=jnp.asarray(p["freq"]),
+                cum=jnp.concatenate([
+                    jnp.zeros((1,), jnp.uint32),
+                    jnp.cumsum(jnp.asarray(p["freq"]), dtype=jnp.uint32)]),
+            )
+            stream = ans.AnsStream(words=jnp.asarray(p["words"]),
+                                   lens=jnp.asarray(p["lens"]), table=table,
+                                   n=p["n"], lanes=self.lanes)
+            exp = ans.decode(stream)
+        else:
+            p = msg.exp_payload
+            pk = packing.PackedPlane(
+                payload=jnp.asarray(p["payload"]),
+                bases=jnp.asarray(p["bases"]),
+                exc_idx=jnp.asarray(p["exc_idx"]),
+                exc_raw=jnp.asarray(p["exc_raw"]),
+                overflow=jnp.asarray(p["overflow"]),
+                width=msg.width, block=self.block, n=p["n"],
+                exp_bits=lay.exp_bits)
+            exp = packing.unpack_exponents(pk)
+        return codec.merge_planes(exp, lo, lay.dtype, msg.shape)
+
+    # -- transfer (timing model + optional wall-clock) --------------------------
+
+    def transfer_times(self, msg: Message, wire: WireModel,
+                       codec_model: Optional[CodecModel] = None) -> dict:
+        """Modelled transfer times for the three pipelines (paper Fig. 4).
+
+        ``codec_model`` substitutes the paper-calibrated H200 codec rates
+        for the CPU-measured stage times (benchmarks use it so the overlap
+        dynamics match the hardware the paper measures)."""
+        lo_b = msg.lo_payload.nbytes
+        if msg.codec == "rans":
+            exp_b = msg.exp_payload["used_bytes"] + 256 * 12 // 8
+        else:
+            exp_b = (msg.exp_payload["payload"].nbytes
+                     + msg.exp_payload["bases"].nbytes
+                     + msg.exp_payload["exc_idx"].nbytes
+                     + msg.exp_payload["exc_raw"].nbytes)
+        if codec_model is not None:
+            t_split = codec_model.t_split(msg.raw_bytes)
+            t_encode = codec_model.t_encode(msg.raw_bytes)
+        else:
+            t_split, t_encode = msg.t_split, msg.t_encode
+        t_raw = wire.t(msg.raw_bytes)
+        t_encode_send = t_split + t_encode + wire.t(lo_b + exp_b)
+        t_split_send = t_split + max(wire.t(lo_b), t_encode) \
+            + wire.t(exp_b)
+        return {
+            "raw_bytes": msg.raw_bytes,
+            "wire_bytes": lo_b + exp_b,
+            "ratio": (lo_b + exp_b) / msg.raw_bytes,
+            "t_raw": t_raw,
+            "t_encode_send": t_encode_send,
+            "t_split_send": t_split_send,
+            "speedup_split_send": t_raw / t_split_send,
+            "speedup_encode_send": t_raw / t_encode_send,
+        }
+
+
+def send_tensor(x, *, tensor_class: str = "weight",
+                wire: WireModel = WireModel(), codec_name: str = "packed"):
+    """One-call helper: encode → (modelled) transfer → decode.  Returns
+    (tensor, report)."""
+    eng = Compressor.instance(codec_name=codec_name)
+    if eng.codec_name != codec_name:
+        eng = Compressor(codec_name=codec_name)
+    msg = eng.encode(x, tensor_class=tensor_class)
+    report = eng.transfer_times(msg, wire)
+    out = eng.decode(msg)
+    return out, report

@@ -1,0 +1,205 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs   / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes   / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+``cost_analysis()`` supplies HLO_FLOPs and HLO bytes-accessed; collective
+bytes are NOT in cost_analysis, so we parse the compiled HLO text and sum
+the operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.
+
+Hardware constants (assignment): TPU v5e-class — 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI.
+
+Caveats, stated where the numbers are used (EXPERIMENTS.md):
+  * cost_analysis FLOPs on the CPU backend count the SPMD program of ONE
+    device (post-partitioning), which is what the per-chip roofline wants;
+  * collective operand bytes are per-device payloads; a ring all-gather
+    moves (k-1)/k × result bytes per link — we report the operand-sum
+    (bytes injected per device) divided by link bandwidth, a standard
+    first-order model;
+  * the CPU backend lowers some collectives differently from TPU (no ICI
+    topology) — the BYTES are layout-independent, which is why the roofline
+    is stated in bytes, not in schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+from typing import Optional
+
+# -- hardware constants (TPU v5e-class, per assignment) -----------------------
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (~per chip per direction, first-order)
+DCN_BW = 25e9  # bytes/s per chip across pods (assumed half ICI)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# an HLO op line:  %name = RESULT_SHAPE opcode(operands), attrs...
+# post-optimization printing omits operand shapes, so we read the RESULT
+# shape(s) and derive operand bytes from the collective's semantics.
+_OP_LINE_RE = re.compile(
+    r"=\s+(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective operand bytes by kind, from compiled HLO text.
+
+    Operand size per result size: all-gather result = k × operand;
+    reduce-scatter operand = k × result; all-reduce / all-to-all /
+    collective-permute operand = result.  ``*-done`` ops are skipped (their
+    payload was counted at the matching ``*-start``)."""
+    out = {k: 0 for k in _COLL_KINDS}
+    counts = {k: 0 for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        m = _OP_LINE_RE.search(line)
+        if not m:
+            continue
+        result_shape, kind, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue
+        b = _shape_bytes(result_shape)
+        k = _group_size(line)
+        if kind == "all-gather":
+            b = b // max(k, 1)
+        elif kind == "reduce-scatter":
+            b = b * k
+        out[kind] += b
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float  # per-device HLO flops
+    hbm_bytes: float  # per-device bytes accessed
+    coll_bytes: float  # per-device collective operand bytes
+    model_flops: float  # 6·N_active·D (whole step, global)
+    n_chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline-ideal step time = max of the three terms (perfect
+        overlap assumption)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × chips) — how much of the compiled
+        compute is 'useful' (catches remat/redundancy waste)."""
+        total_hlo = self.flops * self.n_chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the bound:
+        (useful FLOPs / chips / peak) / t_bound."""
+        t_useful = self.model_flops / self.n_chips / PEAK_FLOPS_BF16
+        return t_useful / self.t_bound if self.t_bound else 0.0
+
+
+def model_flops_for(arch: str, shape_name: str) -> float:
+    """6·N·D (dense) or 6·N_active·D (MoE); decode/prefill use 2·N·D per
+    generated/processed token (forward only)."""
+    from repro import configs
+    from repro.launch import cells as cells_lib
+    cfg = configs.get(arch)
+    shape = cells_lib.SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n_active * shape.global_batch
+
+
+def analyze_cell(json_path: str, hlo_path: Optional[str] = None) -> Roofline:
+    with open(json_path) as f:
+        rec = json.load(f)
+    hlo_path = hlo_path or json_path.replace(".json", ".hlo.txt")
+    with open(hlo_path) as f:
+        coll = collective_bytes(f.read())
+    n_chips = 512 if rec["mesh"] == "multi" else 256
+    flops = float(rec["cost"].get("flops", 0.0) or 0.0)
+    hbm = float(rec["cost"].get("bytes accessed", 0.0) or 0.0)
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        flops=flops, hbm_bytes=hbm, coll_bytes=float(coll["total_bytes"]),
+        model_flops=model_flops_for(rec["arch"], rec["shape"]),
+        n_chips=n_chips,
+    )
+
+
+def markdown_row(r: Roofline) -> str:
+    return (f"| {r.arch} | {r.shape} | {r.mesh} | "
+            f"{r.t_compute*1e3:.2f} | {r.t_memory*1e3:.2f} | "
+            f"{r.t_collective*1e3:.2f} | {r.bottleneck} | "
+            f"{r.useful_flops_fraction:.2f} | {r.roofline_fraction:.3f} |")
+
+
+MD_HEADER = ("| arch | shape | mesh | compute (ms) | memory (ms) | "
+             "collective (ms) | bottleneck | useful-FLOPs | roofline-frac |\n"
+             "|---|---|---|---|---|---|---|---|---|")

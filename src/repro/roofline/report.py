@@ -1,0 +1,59 @@
+"""Roofline report generator: experiments/dryrun/*.json+hlo → markdown.
+
+    PYTHONPATH=src python -m repro.roofline.report --dir experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.roofline.analysis import MD_HEADER, analyze_cell, markdown_row
+
+
+def collect(dir_: str, mesh: str = "single", compressed_only: bool = True):
+    rows = []
+    for jp in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        base = os.path.basename(jp)
+        if base.endswith("__raw.json") and compressed_only:
+            continue
+        with open(jp) as f:
+            rec = json.load(f)
+        if rec.get("mesh") != mesh or not rec.get("ok"):
+            continue
+        hlo = jp.replace(".json", ".hlo.txt")
+        if not os.path.exists(hlo):
+            continue
+        rows.append(analyze_cell(jp, hlo))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+    rows = collect(args.dir, args.mesh)
+    shape_order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+                   "long_500k": 3}
+    rows.sort(key=lambda r: (r.arch, shape_order.get(r.shape, 9)))
+    print(MD_HEADER)
+    for r in rows:
+        print(markdown_row(r))
+    if args.json_out:
+        out = [dict(arch=r.arch, shape=r.shape, mesh=r.mesh,
+                    t_compute=r.t_compute, t_memory=r.t_memory,
+                    t_collective=r.t_collective, bottleneck=r.bottleneck,
+                    useful=r.useful_flops_fraction,
+                    roofline_fraction=r.roofline_fraction,
+                    flops=r.flops, hbm_bytes=r.hbm_bytes,
+                    coll_bytes=r.coll_bytes, model_flops=r.model_flops)
+               for r in rows]
+        with open(args.json_out, "w") as f:
+            json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

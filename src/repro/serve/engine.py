@@ -1,0 +1,183 @@
+"""Serving engine: prefill/decode step builders + continuous batching.
+
+The inference side of the framework (paper §5.3.2 evaluates UZIP on vLLM's
+prefill-decode disaggregation).  Two deployment modes:
+
+  * **colocated** — one worker runs prefill and decode;
+  * **PD-disaggregated** — prefill workers fill KV caches and ship them to
+    decode workers over the compressed split-send P2P path
+    (serve/kv_transfer.py); decode workers run the batched decode loop.
+
+``ServeEngine`` implements slot-based continuous batching: a fixed number of
+decode slots, each holding one request's cache position; finished slots are
+refilled from the queue without stopping the decode loop (static shapes —
+the compiled decode step never re-specializes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch_slots: int = 8
+    max_len: int = 256
+    temperature: float = 0.0  # 0 = greedy
+    eos_token: int = -1  # -1 = never stops early
+    prefill_chunk: int = 64  # pad prompts to a multiple of this
+
+
+def build_prefill_step(cfg: ArchConfig):
+    """(params, batch, cache) -> (last logits, filled cache)."""
+    def step(params, batch, cache):
+        return transformer.prefill(params, batch, cfg, cache)
+    return step
+
+
+def build_decode_step(cfg: ArchConfig):
+    """(params, tokens (B,1), cache) -> (logits (B,1,V), cache)."""
+    def step(params, tokens, cache, enc_out=None):
+        return transformer.decode_step(params, tokens, cache, cfg,
+                                       enc_out=enc_out)
+    return step
+
+
+def sample(logits: jax.Array, key, temperature: float):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(
+        jnp.int32)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (L,) int32
+    max_new: int = 32
+    out: Optional[list] = None
+    done: bool = False
+
+
+class ServeEngine:
+    """Slot-based continuous batching on a single worker.
+
+    Decode runs over all ``batch_slots`` every step (static shapes); slots
+    whose request finished are masked and refilled between steps.  Per-slot
+    KV caches live inside one batched cache; admission writes a freshly
+    prefilled single-request cache into the slot via indexed updates.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig):
+        self.cfg, self.params, self.scfg = cfg, params, scfg
+        self.prefill_step = jax.jit(build_prefill_step(cfg))
+        self.decode_step = jax.jit(build_decode_step(cfg))
+        self._splice = jax.jit(self._splice_impl, donate_argnums=(0,))
+        self.cache = transformer.init_cache(cfg, scfg.batch_slots, scfg.max_len)
+        self.tokens = jnp.zeros((scfg.batch_slots, 1), jnp.int32)
+        self.slots: list = [None] * scfg.batch_slots
+        self.pos = np.zeros(scfg.batch_slots, np.int64)
+        self.budget = np.zeros(scfg.batch_slots, np.int64)
+        self.queue: list = []
+        self.finished: list = []
+        self._key = jax.random.PRNGKey(0)
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, req: Request):
+        req.out = []
+        self.queue.append(req)
+
+    @staticmethod
+    def _splice_impl(batched_cache, one_cache, slot):
+        """Write a single-request cache (batch=1) into slot ``slot``."""
+        def leafwise(b, o):
+            if b.ndim == 0:
+                return b
+            # batch dim: prefix/blocks caches have batch at 0 or 1 (stacked)
+            if o.shape[0] == 1 and b.shape[: 1] != o.shape[: 1]:
+                return jax.lax.dynamic_update_slice_in_dim(b, o.astype(b.dtype), slot, 0)
+            if o.ndim >= 2 and o.shape[1] == 1:
+                return jax.lax.dynamic_update_slice_in_dim(b, o.astype(b.dtype), slot, 1)
+            return b
+        # "pos" is scalar-per-engine; slot positions tracked host-side
+        out = {}
+        for k, v in batched_cache.items():
+            if k == "pos":
+                out[k] = v
+                continue
+            out[k] = jax.tree.map(leafwise, v, one_cache[k])
+        return out
+
+    def _admit(self):
+        for s in range(self.scfg.batch_slots):
+            if self.slots[s] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            L = len(req.prompt)
+            pad = -len(req.prompt) % self.scfg.prefill_chunk or 0
+            toks = np.concatenate([np.zeros(pad, np.int32), req.prompt])
+            one_cache = transformer.init_cache(self.cfg, 1, self.scfg.max_len)
+            logits, one_cache = self.prefill_step(
+                self.params, {"tokens": jnp.asarray(toks[None])}, one_cache)
+            # NOTE: left-padding shifts positions; acceptable for the demo
+            # engine (pad=0 when prompts align with prefill_chunk)
+            nxt = sample(logits[:, -1], self._next_key(), self.scfg.temperature)
+            self.cache = self._splice(self.cache, one_cache, s)
+            self.tokens = self.tokens.at[s, 0].set(nxt[0])
+            req.out.append(int(nxt[0]))
+            if req.max_new <= 1:  # prefill-sampled token was the budget
+                req.done = True
+                self.finished.append(req)
+                continue
+            self.slots[s] = req
+            self.pos[s] = len(toks)
+            self.budget[s] = req.max_new - 1  # first token came from prefill
+
+    def _next_key(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    # -- decode loop -----------------------------------------------------------
+
+    def step(self):
+        """One batched decode step over all active slots."""
+        if all(s is None for s in self.slots):
+            self._admit()
+            if all(s is None for s in self.slots):
+                return False
+        # engine-wide cache pos = max slot pos (slot caches padded before it)
+        self.cache["pos"] = jnp.asarray(int(self.pos.max()), jnp.int32)
+        logits, self.cache = self.decode_step(self.params, self.tokens, self.cache)
+        nxt = sample(logits[:, -1], self._next_key(), self.scfg.temperature)
+        self.tokens = nxt[:, None]
+        for s, req in enumerate(self.slots):
+            if req is None:
+                continue
+            t = int(nxt[s])
+            req.out.append(t)
+            self.pos[s] += 1
+            self.budget[s] -= 1
+            if self.budget[s] <= 0 or t == self.scfg.eos_token or \
+               self.pos[s] >= self.scfg.max_len - 1:
+                req.done = True
+                self.finished.append(req)
+                self.slots[s] = None
+        self._admit()
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while steps < max_steps and (self.queue or any(
+                s is not None for s in self.slots)):
+            if not self.step():
+                break
+            steps += 1
+        return self.finished

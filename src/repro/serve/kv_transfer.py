@@ -1,0 +1,114 @@
+"""KV-cache transfer for prefill-decode disaggregation (paper §5.3.2).
+
+The paper integrates UZIP-NCCL into vLLM's P1D3 pipeline and measures up to
+30.1 % lower KV-transfer latency (→ ~10 % end-to-end).  Here the transfer
+is the compressed split-send P2P pipeline applied leaf-wise to the cache
+pytree, with the paper's large-block granularity: all compressible leaves
+are fused into ONE flat message per transfer (bucketing), not sent
+per-layer.
+
+Two call modes:
+  * in-mesh (`transfer_cache`): prefill and decode ranks live on one mesh
+    axis; the wire is ``split_send`` over that axis (lowered collectives —
+    used by the dry-run and the multi-device tests);
+  * host-path (`pack_cache`/`unpack_cache`): PD workers are separate
+    processes; the cache is encoded with the host rANS engine
+    (p2p/engine.py) and shipped out-of-band (used by examples/).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec
+from repro.core.policy import CompressionPolicy
+from repro.core.split_send import p2p_send
+
+
+def _bucket_leaves(cache):
+    """Split cache leaves into (compressible, passthrough) index sets."""
+    leaves = jax.tree_util.tree_leaves(cache)
+    comp, raw = [], []
+    for i, l in enumerate(leaves):
+        if (hasattr(l, "dtype") and jnp.dtype(l.dtype).name in codec.LAYOUTS
+                and l.ndim > 0):
+            comp.append(i)
+        else:
+            raw.append(i)
+    return leaves, comp, raw
+
+
+def transfer_cache(cache, axis_name, perm, *, policy: CompressionPolicy,
+                   strategy: str = "split_send"):
+    """Ship a KV-cache pytree across ``perm`` on mesh axis ``axis_name``.
+
+    All compressible leaves are fused into one flat bf16/f32 message per
+    dtype (paper Property 1: large blocks keep the codec efficient), then
+    moved with the split-send pipeline.  Returns (cache_at_dest, flag).
+    """
+    leaves, comp, raw = _bucket_leaves(cache)
+    treedef = jax.tree_util.tree_structure(cache)
+    out = list(leaves)
+    flag = jnp.int32(0)
+    # group compressible leaves by dtype
+    groups: dict = {}
+    for i in comp:
+        groups.setdefault(jnp.dtype(leaves[i].dtype).name, []).append(i)
+    for name, idxs in groups.items():
+        parts = [leaves[i].reshape(-1) for i in idxs]
+        sizes = [p.shape[0] for p in parts]
+        bucket = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+        got, f = p2p_send(bucket, axis_name, perm, policy=policy,
+                          tensor_class="activation", strategy=strategy)
+        flag = jnp.maximum(flag, f)
+        offs = np.cumsum([0] + sizes)
+        for k, i in enumerate(idxs):
+            out[i] = got[offs[k]: offs[k + 1]].reshape(leaves[i].shape)
+    from repro.core.compressed_collectives import raw_ppermute
+    for i in raw:
+        out[i] = raw_ppermute(
+            leaves[i][None] if leaves[i].ndim == 0 else leaves[i],
+            axis_name, perm)
+        if leaves[i].ndim == 0:
+            out[i] = out[i][0]
+    return jax.tree_util.tree_unflatten(treedef, out), flag
+
+
+# ---------------------------------------------------------------------------
+# host path (separate prefill/decode processes)
+# ---------------------------------------------------------------------------
+
+def pack_cache(cache, engine) -> dict:
+    """Encode a cache pytree with the host P2P engine (rANS or packing).
+
+    Returns a wire dict {"messages": [...], "treedef": ..., "meta": [...]}
+    suitable for out-of-band shipment."""
+    leaves, comp, raw = _bucket_leaves(cache)
+    msgs, meta = [], []
+    for i, l in enumerate(leaves):
+        arr = np.asarray(l)
+        if i in comp:
+            msgs.append(engine.encode(arr))
+            meta.append(("z", arr.shape, arr.dtype.name))
+        else:
+            msgs.append(arr)
+            meta.append(("raw", arr.shape, arr.dtype.name))
+    return {
+        "messages": msgs,
+        "treedef": jax.tree_util.tree_structure(cache),
+        "meta": meta,
+    }
+
+
+def unpack_cache(wire: dict, engine):
+    out = []
+    for msg, (kind, shape, dtype) in zip(wire["messages"], wire["meta"]):
+        if kind == "z":
+            out.append(jnp.asarray(engine.decode(msg)).reshape(shape))
+        else:
+            out.append(jnp.asarray(msg))
+    return jax.tree_util.tree_unflatten(wire["treedef"], out)

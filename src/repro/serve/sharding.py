@@ -1,0 +1,102 @@
+"""Sharding helpers for the serving paths (prefill / decode / long-context).
+
+Serving is pure GSPMD (no manual axes): params carry model-axis TP specs
+(plus DP-axis FSDP-style sharding for archs whose params exceed
+HBM × model_shards), KV caches shard batch over the DP axes and the
+sequence dim over 'model' (context-parallel decode — XLA inserts the
+partial-softmax reductions automatically for contractions over the sharded
+sequence dim)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer
+from repro.models.config import ArchConfig
+from repro.train.step import model_specs, sanitize_specs
+
+
+def serve_param_specs(cfg: ArchConfig, mesh, *, shard_over_dp_bytes: int = 1 << 32):
+    """Param specs for serving.  Leaves bigger than ``shard_over_dp_bytes``
+    per model shard get an extra DP-axis sharding on a free dim (deepseek-
+    v3's 1.34 TB cannot replicate across DP even at model=16)."""
+    specs = model_specs(cfg, mesh)
+    params_shape = transformer.abstract_params(cfg)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+    n_model = mesh.shape["model"]
+    dpax = dp if len(dp) > 1 else dp[0]
+
+    def f(p, s):
+        entries = list(tuple(s)) + [None] * (p.ndim - len(tuple(s)))
+        sharded_frac = np.prod([
+            int(np.prod([mesh.shape[a] for a in ((e,) if isinstance(e, str)
+                                                 else tuple(e))]))
+            for e in entries if e is not None] or [1])
+        local_bytes = int(np.prod(p.shape)) * jnp.dtype(p.dtype).itemsize / sharded_frac
+        if local_bytes < shard_over_dp_bytes:
+            return P(*entries)
+        for d in range(p.ndim - 1, 0, -1):
+            if entries[d] is None and p.shape[d] % n_dp == 0:
+                entries[d] = dpax
+                return P(*entries)
+        return P(*entries)
+
+    return jax.tree.map(f, params_shape, specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def cache_specs(cfg: ArchConfig, mesh, batch: int, max_len: int):
+    """PartitionSpecs for a KV cache built by ``transformer.init_cache``.
+
+    Heuristic per leaf (robust because ``max_len`` is unique among dims):
+    batch dim → DP axes (if divisible); the dim equal to ``max_len`` →
+    'model' (context-parallel); stacked block leaves have a leading repeats
+    dim (None)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+    n_model = mesh.shape["model"]
+    dpax = dp if len(dp) > 1 else dp[0]
+    struct = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, batch, max_len))
+
+    def f(p):
+        if p.ndim == 0:
+            return P()
+        entries = [None] * p.ndim
+        start = 0
+        if p.shape[0] == cfg.repeats and p.ndim > 1 and p.shape[1] == batch:
+            start = 1  # stacked block leaf
+        if p.shape[start] == batch and batch % n_dp == 0:
+            entries[start] = dpax
+        for d in range(start + 1, p.ndim):
+            if p.shape[d] == max_len and max_len % n_model == 0:
+                entries[d] = "model"
+                break
+        return P(*entries)
+
+    return jax.tree.map(f, struct,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)), struct
+
+
+def abstract_cache(cfg: ArchConfig, mesh, batch: int, max_len: int):
+    """ShapeDtypeStruct cache with shardings attached (dry-run input)."""
+    specs, struct = cache_specs(cfg, mesh, batch, max_len)
+    out = jax.tree.map(
+        lambda st, sp: jax.ShapeDtypeStruct(
+            st.shape, st.dtype, sharding=NamedSharding(mesh, sp)),
+        struct, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return out, specs
+
+
+def abstract_params_sharded(cfg: ArchConfig, mesh, specs):
+    struct = transformer.abstract_params(cfg)
+    return jax.tree.map(
+        lambda st, sp: jax.ShapeDtypeStruct(
+            st.shape, st.dtype, sharding=NamedSharding(mesh, sp)),
+        struct, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

@@ -1,0 +1,86 @@
+"""Codec layer: bit-exact split/merge across formats, incl. specials."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import codec
+
+DTYPES = list(codec.LAYOUTS)
+
+
+def bits_of(x):
+    lay = codec.layout_of(x.dtype)
+    return jax.lax.bitcast_convert_type(x, lay.uint_dtype)
+
+
+@pytest.mark.parametrize("dt", DTYPES)
+def test_split_merge_roundtrip(dt):
+    lay = codec.LAYOUTS[dt]
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 3, size=(4321,)), lay.dtype)
+    x = x.at[0].set(jnp.inf).at[1].set(-jnp.inf).at[2].set(jnp.nan).at[3].set(0.0)
+    exp, lo = codec.split_planes(x)
+    y = codec.merge_planes(exp, lo, lay.dtype, x.shape)
+    assert (bits_of(x) == bits_of(y)).all()
+
+
+@pytest.mark.parametrize("dt", DTYPES)
+def test_split_merge_all_bitpatterns_8_16(dt):
+    """Exhaustive for 8/16-bit formats: every bit pattern round-trips."""
+    lay = codec.LAYOUTS[dt]
+    if lay.total_bits > 16:
+        pytest.skip("exhaustive only for <=16-bit formats")
+    n = 1 << lay.total_bits
+    bits = jnp.arange(n, dtype=jnp.uint32).astype(lay.uint_dtype)
+    x = jax.lax.bitcast_convert_type(bits, lay.dtype)
+    exp, lo = codec.split_planes(x)
+    y = codec.merge_planes(exp, lo, lay.dtype, x.shape)
+    assert (bits == bits_of(y)).all()
+    # lo values fit in lo_bits (bit-packable), exponents in exp_bits
+    assert int(lo.max()) < (1 << lay.lo_bits)
+    assert int(exp.max()) < (1 << lay.exp_bits)
+
+
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=300))
+@settings(max_examples=30, deadline=None)
+def test_split_merge_f32_property(raw_bits):
+    bits = jnp.asarray(np.asarray(raw_bits, np.uint32))
+    x = jax.lax.bitcast_convert_type(bits, jnp.float32)
+    exp, lo = codec.split_planes(x)
+    y = codec.merge_planes(exp, lo, jnp.float32, x.shape)
+    assert (bits == bits_of(y)).all()
+
+
+@pytest.mark.parametrize("dt", ["float8_e4m3fn", "float8_e5m2"])
+def test_fp8_pair_packing(dt):
+    lay = codec.LAYOUTS[dt]
+    rng = np.random.default_rng(1)
+    for n in [2, 7, 256, 1001]:
+        exp = jnp.asarray(
+            rng.integers(0, 1 << lay.exp_bits, n).astype(np.uint8)
+        )
+        pk = codec.pack_fp8_exp_pairs(exp, lay.exp_bits)
+        up = codec.unpack_fp8_exp_pairs(pk, lay.exp_bits, n)
+        assert (up == exp).all()
+
+
+def test_plane_fractions_match_paper():
+    # Paper Property 2: bf16 halves; f32 is ~3/4 uncompressed.
+    lo, hi = codec.plane_fractions(jnp.bfloat16)
+    assert lo == 0.5 and hi == 0.5
+    lo, hi = codec.plane_fractions(jnp.float32)
+    assert lo == 0.75 and hi == 0.25
+
+
+def test_exponent_entropy_bounds():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.uniform(-1, 1, 1 << 15), jnp.bfloat16)
+    exp, _ = codec.split_planes(x)
+    h = float(codec.exponent_entropy_bits(exp, 8))
+    # normalized tensors: exponent entropy ~2 bits (paper: bf16 total 0.64
+    # => ~2.2 bits/exponent); always within [0, 8]
+    assert 0.0 <= h <= 8.0
+    assert h < 4.0  # skewed, as the paper requires for compressibility

@@ -1,0 +1,65 @@
+"""Multi-device correctness: compressed collectives, train-step
+losslessness, P2P pipelines and KV transfer on 8 fake host devices.
+
+Runs in a subprocess because the device-count XLA flag must be set before
+jax initializes, and this pytest process must keep the default 1-device
+view (assignment: do NOT set the flag globally)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+DRIVER = os.path.join(os.path.dirname(__file__), "drivers", "multidev.py")
+
+_results = None
+
+
+def results():
+    global _results
+    if _results is None:
+        out = subprocess.run([sys.executable, DRIVER], capture_output=True,
+                             text=True, timeout=2400)
+        assert out.returncode == 0, out.stderr[-3000:]
+        line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")]
+        assert line, out.stdout[-2000:]
+        _results = json.loads(line[-1][len("RESULT "):])
+    return _results
+
+
+def test_psum_two_shot_exact():
+    r = results()
+    assert r["psum_two_shot_exact"] and r["psum_two_shot_flag"] == 0
+
+
+def test_psum_ring_exact():
+    r = results()
+    assert r["psum_ring_exact"] and r["psum_ring_flag"] == 0
+
+
+def test_all_to_all_exact():
+    r = results()
+    assert r["a2a_exact"] and r["a2a_flag"] == 0
+
+
+@pytest.mark.parametrize("strategy", ["split", "encode", "chunked"])
+def test_p2p_pipelines_exact(strategy):
+    r = results()
+    assert r[f"p2p_{strategy}_exact"] and r[f"p2p_{strategy}_flag"] == 0
+
+
+def test_tree_psum_mixed_pytree():
+    assert results()["tree_psum_exact"]
+
+
+@pytest.mark.parametrize("part", ["zero1", "fsdp"])
+def test_train_step_lossless(part):
+    r = results()
+    assert r[f"train_{part}_bitexact"], \
+        "compressed training must be bit-identical to uncompressed"
+    assert r[f"train_{part}_loss_drop"]
+
+
+def test_kv_transfer_exact():
+    assert results()["kv_transfer_exact"]

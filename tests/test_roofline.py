@@ -1,0 +1,69 @@
+"""Roofline analysis: HLO collective-byte parser + three-term model."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import analysis as A
+
+
+HLO_SAMPLE = """
+HloModule test
+ENTRY main {
+  %p = bf16[8,1024]{1,0} parameter(0)
+  %ag = bf16[64,1024]{1,0} all-gather(%p), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %ar = f32[512]{0} all-reduce(%x), replica_groups=[8,64]<=[512], to_apply=%add
+  %rs = u16[2,128]{1,0} reduce-scatter(%y), replica_groups={{0,1}}, dimensions={0}
+  %a2a = (u32[1,64]{1,0}, u32[1,64]{1,0}) all-to-all(%a, %b), replica_groups={{0,1}}
+  %cp = bf16[256]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %ags = bf16[64,4]{1,0} all-gather-start(%q), replica_groups={{0,1,2,3}}, dimensions={0}
+  %agd = bf16[64,4]{1,0} all-gather-done(%ags)
+}
+"""
+
+
+def test_collective_bytes_parser():
+    r = A.collective_bytes(HLO_SAMPLE)
+    b = r["bytes"]
+    # all-gather: result 64*1024*2 bytes / group 8 = operand 16384
+    #           + start op: 64*4*2/4 = 128 (done skipped)
+    assert b["all-gather"] == 64 * 1024 * 2 // 8 + 64 * 4 * 2 // 4
+    assert b["all-reduce"] == 512 * 4
+    # reduce-scatter: result 2*128*2 bytes * group 2
+    assert b["reduce-scatter"] == 2 * 128 * 2 * 2
+    # all-to-all: tuple result = 2 * 64 u32
+    assert b["all-to-all"] == 2 * 64 * 4
+    assert b["collective-permute"] == 256 * 2
+    assert r["counts"]["all-gather"] == 2
+
+
+def test_roofline_terms_and_bottleneck():
+    r = A.Roofline(arch="x", shape="train_4k", mesh="single",
+                   flops=197e12 * 0.010,  # 10 ms compute
+                   hbm_bytes=819e9 * 0.005,  # 5 ms memory
+                   coll_bytes=50e9 * 0.020,  # 20 ms collective
+                   model_flops=197e12 * 0.008 * 256, n_chips=256)
+    assert r.t_compute == pytest.approx(0.010)
+    assert r.t_memory == pytest.approx(0.005)
+    assert r.t_collective == pytest.approx(0.020)
+    assert r.bottleneck == "collective"
+    assert r.t_bound == pytest.approx(0.020)
+    assert r.useful_flops_fraction == pytest.approx(0.8)
+    assert r.roofline_fraction == pytest.approx(0.008 / 0.020)
+
+
+def test_model_flops_train_vs_decode():
+    t = A.model_flops_for("tinyllama_1_1b", "train_4k")
+    d = A.model_flops_for("tinyllama_1_1b", "decode_32k")
+    p = A.model_flops_for("tinyllama_1_1b", "prefill_32k")
+    # train: 6ND on 256*4096 tokens; decode: 2ND on 128 tokens
+    assert t / d == pytest.approx(3 * 256 * 4096 / 128)
+    assert p / d == pytest.approx(32 * 32768 / 128)
+
+
+def test_moe_uses_active_params():
+    from repro import configs
+    dense_equiv = A.model_flops_for("deepseek_v2_lite_16b", "train_4k")
+    cfg = configs.get("deepseek_v2_lite_16b")
+    assert dense_equiv == pytest.approx(
+        6.0 * cfg.active_param_count() * 256 * 4096)
+    assert cfg.active_param_count() < 0.3 * cfg.param_count()

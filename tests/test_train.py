@@ -1,0 +1,173 @@
+"""Training substrate: loss decreases, guard semantics, data pipeline,
+optimizers — on the single-device mesh (degenerate axes exercise the full
+shard_map code path without the multi-device flag)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import configs
+from repro.core.policy import CompressionPolicy
+from repro.data.pipeline import DataConfig, DataPipeline
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import registry
+from repro.optim import optimizers as opt_lib
+from repro.train import step as step_lib
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_smoke_mesh(1)
+
+
+def _train(cfg, tcfg, mesh, batch, steps=6, seed=0):
+    step, _ = step_lib.build_train_step(cfg, tcfg, mesh)
+    state, _ = step_lib.build_train_state(cfg, tcfg, mesh,
+                                          jax.random.PRNGKey(seed))
+    jstep = jax.jit(step, donate_argnums=(0,))
+    losses = []
+    for _ in range(steps):
+        state, m = jstep(state, batch)
+        losses.append(float(m["loss"]))
+    return state, losses, m
+
+
+def test_loss_decreases_zero1(mesh):
+    cfg = configs.get_smoke("smollm_135m")
+    tcfg = step_lib.TrainConfig(
+        microbatches=2, policy=CompressionPolicy(min_bytes=0),
+        optim=opt_lib.OptimConfig(lr=1e-3, warmup_steps=2))
+    batch = registry.make_batch(cfg, 4, 32)
+    _, losses, m = _train(cfg, tcfg, mesh, batch)
+    assert losses[-1] < losses[0]
+    assert int(m["overflow"]) == 0
+
+
+def test_loss_decreases_fsdp(mesh):
+    cfg = configs.get_smoke("smollm_135m")
+    tcfg = step_lib.TrainConfig(
+        microbatches=1, policy=CompressionPolicy(min_bytes=0),
+        partition="fsdp", fsdp_min_bytes=0,
+        optim=opt_lib.OptimConfig(lr=1e-3, warmup_steps=2))
+    batch = registry.make_batch(cfg, 4, 32)
+    _, losses, _ = _train(cfg, tcfg, mesh, batch)
+    assert losses[-1] < losses[0]
+
+
+def test_adafactor_path(mesh):
+    cfg = configs.get_smoke("deepseek_v3_671b")
+    tcfg = step_lib.TrainConfig(
+        microbatches=1, policy=CompressionPolicy(min_bytes=0),
+        optim=opt_lib.OptimConfig(name="adafactor", lr=1e-3, warmup_steps=2))
+    batch = registry.make_batch(cfg, 2, 16)
+    _, losses, _ = _train(cfg, tcfg, mesh, batch, steps=5)
+    assert losses[-1] < losses[0]
+
+
+def test_guard_masks_update_on_overflow(mesh):
+    """Force overflow (width=1, no exceptions) -> state must NOT change and
+    the step counter must not advance."""
+    from repro.core.calibrate import CompressionProfile
+    cfg = configs.get_smoke("smollm_135m")
+    prof = CompressionProfile(widths={"gradient": 1, "weight": 1},
+                              exc_frac=1e-9)
+    pol = CompressionPolicy(min_bytes=0, profile=prof)
+    tcfg = step_lib.TrainConfig(microbatches=1, policy=pol,
+                                optim=opt_lib.OptimConfig(lr=1e-3))
+    step, _ = step_lib.build_train_step(cfg, tcfg, mesh)
+    state, _ = step_lib.build_train_state(cfg, tcfg, mesh,
+                                          jax.random.PRNGKey(0))
+    before = jax.tree.map(lambda x: np.asarray(x).copy(), state["params"])
+    batch = registry.make_batch(cfg, 2, 16)
+    state, m = jax.jit(step)(state, batch)
+    assert int(m["overflow"]) == 1
+    assert int(state["step"]) == 0, "step must not advance on overflow"
+    same = all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(jax.tree_util.tree_leaves(before),
+                               jax.tree_util.tree_leaves(state["params"])))
+    assert same, "guarded step must leave params untouched on overflow"
+
+
+def test_microbatch_equivalence(mesh):
+    """k microbatches ≈ one big batch (same data, bf16 accumulation)."""
+    cfg = configs.get_smoke("smollm_135m")
+    batch = registry.make_batch(cfg, 4, 32)
+    mk = lambda k: step_lib.TrainConfig(
+        microbatches=k, policy=CompressionPolicy.disabled(),
+        optim=opt_lib.OptimConfig(lr=1e-3, warmup_steps=2))
+    s1, l1, _ = _train(cfg, mk(1), mesh, batch, steps=3)
+    s4, l4, _ = _train(cfg, mk(4), mesh, batch, steps=3)
+    assert abs(l1[-1] - l4[-1]) < 0.05, (l1, l4)
+
+
+# -- data pipeline -------------------------------------------------------------
+
+def test_pipeline_deterministic_and_resumable():
+    cfg = DataConfig(vocab=1000, global_batch=8, seq_len=16, seed=3)
+    p1 = DataPipeline(cfg)
+    p2 = DataPipeline(cfg)
+    b1 = p1.batch_at(7)
+    b2 = p2.batch_at(7)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    # labels are the shifted tokens
+    assert np.array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    # resume protocol
+    it = iter(p1)
+    next(it), next(it)
+    st_ = p1.state_dict()
+    p3 = DataPipeline(cfg)
+    p3.load_state_dict(st_)
+    assert np.array_equal(next(iter(p3))["tokens"], p1.batch_at(2)["tokens"])
+
+
+def test_pipeline_multihost_disjoint():
+    cfg = DataConfig(vocab=1000, global_batch=8, seq_len=16, seed=3)
+    a = DataPipeline(cfg, process_index=0, process_count=2).batch_at(0)
+    b = DataPipeline(cfg, process_index=1, process_count=2).batch_at(0)
+    assert a["tokens"].shape == (4, 16)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+@given(st.integers(0, 1000), st.integers(2, 8))
+@settings(max_examples=10, deadline=None)
+def test_pipeline_zipf_tokens_in_range(step, vocab_scale):
+    cfg = DataConfig(vocab=vocab_scale * 100, global_batch=2, seq_len=8)
+    b = DataPipeline(cfg).batch_at(step)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < cfg.vocab
+
+
+# -- optimizers ------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    ocfg = opt_lib.OptimConfig(lr=0.1, warmup_steps=1, weight_decay=0.0,
+                               grad_clip=100.0, decay_steps=1000)
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = opt_lib.init(ocfg, params)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum(p["x"] ** 2))(params)
+        params, state = opt_lib.update(ocfg, g, state, params)
+    assert float(jnp.max(jnp.abs(params["x"]))) < 0.1
+
+
+def test_adafactor_factored_shapes():
+    ocfg = opt_lib.OptimConfig(name="adafactor", factored_min_dim=4)
+    params = {"w": jnp.zeros((8, 16)), "b": jnp.zeros((16,))}
+    state = opt_lib.init(ocfg, params)
+    assert state["f"]["w"]["vr"].shape == (8,)
+    assert state["f"]["w"]["vc"].shape == (16,)
+    assert state["f"]["b"]["v"].shape == (16,)
+
+
+def test_lr_schedule_shape():
+    ocfg = opt_lib.OptimConfig(lr=1.0, warmup_steps=10, decay_steps=100,
+                               min_lr_frac=0.1)
+    lrs = [float(opt_lib.lr_at(ocfg, jnp.asarray(s))) for s in
+           [0, 5, 10, 50, 100, 1000]]
+    assert lrs[0] == 0.0 and lrs[1] == pytest.approx(0.5, abs=0.01)
+    assert lrs[2] == pytest.approx(1.0, abs=0.01)
+    assert lrs[3] < lrs[2] and lrs[4] == pytest.approx(0.1, abs=0.01)
+    assert lrs[5] == pytest.approx(0.1, abs=0.01)
