@@ -19,6 +19,27 @@ Implemented primitives:
 
 Reduction is performed in float32 regardless of wire dtype (decode is
 bit-exact; only the summation order differs from a raw ``lax.psum``).
+All reduce paths — fused, unfused, and the raw baselines — accumulate in
+*device-index order* (:func:`_seq_sum` / the fused streaming scan), so the
+fused and unfused collectives are bit-identical and deterministic across
+backends.
+
+Fused execution (paper §3.4, the modified ``CopyReducePacks``): the
+receive side of every reduce-scatter streams each received chunk through
+``kernels/ops.decode_reduce`` — one pass that unpacks the wire, merges the
+planes, and adds into the f32 accumulator — instead of materializing all
+decoded floats in HBM and summing them afterwards.  Exception blocks are
+patched up exactly after each chunk's fused pass (the accumulator rows are
+saved before the kernel and rewritten as ``saved + exact``, preserving the
+accumulation order bit-for-bit).  ``use_fused=False`` keeps the unfused
+decode-then-reduce path for A/B comparison; ``n_groups % TILE_G != 0``
+falls back from the Pallas kernel to the fused pure-jnp reference
+automatically (``kernels/ops.decode_reduce``).
+
+Every compressed wire records a trace-time ``WireReport``
+(``policy.record_wire_report``) with raw vs wire bytes and the decoded-
+float HBM round-trip the unfused path would incur — the roofline and
+``benchmarks/fig9_twoshot.py`` read these.
 
 Every primitive returns ``(value, overflow_flag)`` where the flag is the
 max of all wire ``overflow`` headers — the caller (fault-tolerant training
@@ -35,7 +56,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import codec, packing
-from repro.core.policy import CompressionPolicy
+from repro.core.policy import (CompressionPolicy, WireReport,
+                               record_wire_report)
+from repro.kernels import ops as kernel_ops
 
 
 def _axis_size(axis_name) -> int:
@@ -103,6 +126,18 @@ def psum_safe(x: jax.Array, axes):
     return jax.lax.psum(x, axes)
 
 
+def _seq_sum(vals: jax.Array, acc_dtype=jnp.float32) -> jax.Array:
+    """Deterministic device-index-order accumulation over axis 0.
+
+    The SAME order as the fused streaming pass (zeros, then += chunk 0, 1,
+    ...), so fused and unfused reduce paths are bit-identical.  A plain
+    ``jnp.sum`` is NOT order-stable across backends (XLA reassociates)."""
+    acc0 = jnp.zeros(vals.shape[1:], acc_dtype)
+    acc, _ = jax.lax.scan(lambda a, v: (a + v.astype(acc_dtype), None),
+                          acc0, vals)
+    return acc
+
+
 def psum_raw_twoshot(x: jax.Array, axes, *, acc_dtype=jnp.float32):
     """Uncompressed all-reduce as all_to_all-RS + all-gather.
 
@@ -115,7 +150,7 @@ def psum_raw_twoshot(x: jax.Array, axes, *, acc_dtype=jnp.float32):
     xf = _pad_flat(x.reshape(-1), n_dev)
     rows = xf.reshape(n_dev, -1)
     recv = raw_all_to_all(rows, axes_t, 0, 0)
-    red = jnp.sum(recv.astype(acc_dtype), axis=0).astype(x.dtype)
+    red = _seq_sum(recv, acc_dtype).astype(x.dtype)
     gathered = raw_all_gather(red[None], axes_t, axis=0, tiled=True)
     return gathered.reshape(-1)[:n].reshape(x.shape)
 
@@ -177,21 +212,98 @@ def wire_nbytes(wire: dict) -> int:
     return sum(int(np.prod(v.shape)) * v.dtype.itemsize for v in wire.values())
 
 
+def _record_collective(name: str, axis_name, *, raw_bytes: int, wire: dict,
+                       fused: bool, decoded_elems: int = 0) -> None:
+    """Emit the trace-time WireReport for one compressed wire.
+
+    ``decoded_elems`` is the decoded-f32 element count an UNFUSED receive
+    side materializes between decode and reduce (write + re-read = 8 bytes
+    per element); pass 0 where no reduction follows the decode.  ``fused``
+    records whether this wire actually paid that round-trip (False) or
+    eliminated it (True)."""
+    record_wire_report(WireReport(
+        name=name,
+        axis=str(axis_name),
+        raw_bytes=int(raw_bytes),
+        wire_bytes=wire_nbytes(wire),
+        fused=bool(fused),
+        decode_hbm_bytes=int(8 * decoded_elems),
+    ))
+
+
+def _decode_reduce_chunks(
+    wire: dict, *, dtype, n: int, width: int, block: int,
+    acc: jax.Array | None = None, use_pallas: bool = False,
+):
+    """Fused streaming decode+reduce over received chunks (paper §3.4).
+
+    Scans the leading (chunk) axis of ``wire``; each step runs the fused
+    unpack+merge+accumulate kernel (``kernels/ops.decode_reduce``) and then
+    patches the chunk's exception blocks EXACTLY: the accumulator rows of
+    those blocks are saved before the kernel and rewritten afterwards as
+    ``saved + merge(exc_raw, lo)``, which preserves both losslessness and
+    the device-index accumulation order bit-for-bit (the kernel's garbage
+    contribution at those rows is discarded, not subtracted).
+
+    ``n`` must be a multiple of ``block`` (the collectives pad to it).
+    Returns ``(acc f32 (n,), overflow_flag)``.
+    """
+    lay = codec.layout_of(dtype)
+    assert n % block == 0, (n, block)
+    nb = n // block
+    gpb = block // packing.GROUP  # payload/lo groups per block
+    cap = wire["exc_idx"].shape[-1]
+
+    def body(acc, w):
+        group_bases = jnp.repeat(w["bases"].astype(jnp.uint32), gpb)
+        exc_idx = w["exc_idx"]  # (cap,) block ids; fill value nb = unused
+        pos = (exc_idx[:, None] * block
+               + jnp.arange(block, dtype=jnp.int32)[None, :]).reshape(-1)
+        saved = acc[jnp.minimum(pos, n - 1)]
+        grp = (jnp.minimum(exc_idx, nb - 1)[:, None] * gpb
+               + jnp.arange(gpb, dtype=jnp.int32)[None, :]).reshape(-1)
+        lo_vals = packing.bitplane_unpack(
+            w["lo"][grp], lay.lo_bits).astype(lay.uint_dtype)
+        exact = codec.merge_planes(
+            w["exc_raw"].reshape(-1), lo_vals, lay.dtype, (cap * block,)
+        ).astype(jnp.float32)
+        acc = kernel_ops.decode_reduce(
+            w["payload"], w["lo"], group_bases, acc, lay.name, width,
+            use_pallas=use_pallas,
+        )
+        # fill entries have pos >= n and are dropped; real entries rewrite
+        # the kernel's garbage contribution with the exact value
+        acc = acc.at[pos].set(saved + exact, mode="drop")
+        return acc, None
+
+    if acc is None:
+        acc = jnp.zeros((n,), jnp.float32)
+    acc, _ = jax.lax.scan(body, acc, wire)
+    return acc, jnp.max(wire["overflow"])
+
+
 # ---------------------------------------------------------------------------
 # Two-shot all-reduce (paper Fig. 9) and its phases
 # ---------------------------------------------------------------------------
 
 def reduce_scatter_compressed(
     x: jax.Array, axis_name, *, width: int, block: int = 512,
-    exc_frac: float = 0.02, acc_dtype=jnp.float32,
+    exc_frac: float = 0.02, acc_dtype=jnp.float32, use_fused: bool = True,
+    use_pallas: bool = False,
 ):
     """Compressed reduce-scatter over a flat array.
 
     Device i ends with ``sum_j chunk_i(device j)`` for its chunk.  The wire
     is one ``all_to_all`` on packed planes; each device encodes its chunks
-    in ONE vectorized pass (large-granularity, paper §5.2.2) and performs a
-    single decode before reduction.
-    Returns (local_chunk_sum f32 (chunk,), overflow_flag).
+    in ONE vectorized pass (large-granularity, paper §5.2.2).
+
+    The receive side is FUSED by default (paper §3.4): each received chunk
+    streams through ``kernels/ops.decode_reduce`` straight into the f32
+    accumulator, eliminating the decoded-float HBM round-trip of the
+    decode-then-sum baseline.  ``use_fused=False`` keeps that baseline
+    (bit-identical output — both accumulate in device-index order); a
+    non-f32 ``acc_dtype`` also falls back (the fused kernel is f32-only).
+    Returns (local_chunk_sum acc_dtype (chunk,), overflow_flag).
     """
     n_dev = _axis_size(axis_name)
     xf = _pad_flat(x.reshape(-1), n_dev * block)
@@ -201,10 +313,20 @@ def reduce_scatter_compressed(
     recv = jax.tree.map(
         lambda a: jax.lax.all_to_all(a, axis_name, 0, 0, tiled=False), wire
     )
+    fused = use_fused and acc_dtype == jnp.float32
+    _record_collective(
+        "reduce_scatter", axis_name, raw_bytes=chunks.size * x.dtype.itemsize,
+        wire=wire, fused=fused, decoded_elems=chunks.size,
+    )
+    if fused:
+        return _decode_reduce_chunks(
+            recv, dtype=x.dtype, n=chunks.shape[1], width=width, block=block,
+            use_pallas=use_pallas,
+        )
     vals, flag = _decode_chunks(
         recv, dtype=x.dtype, n=chunks.shape[1], width=width, block=block
     )
-    return jnp.sum(vals.astype(acc_dtype), axis=0), flag
+    return _seq_sum(vals, acc_dtype), flag
 
 
 def all_gather_compressed(
@@ -212,7 +334,9 @@ def all_gather_compressed(
     exc_frac: float = 0.02,
 ):
     """Compressed all-gather of a flat local chunk: ONE encode at the source,
-    one decode of the gathered wire.  Returns (stacked (n_dev, chunk), flag)."""
+    one decode of the gathered wire.  The decode output IS the result (no
+    reduction follows), so there is nothing to fuse on this phase.
+    Returns (stacked (n_dev, chunk), flag)."""
     n_dev = _axis_size(axis_name)
     yf = _pad_flat(y.reshape(-1), block)
     wire = _encode_chunks(yf[None], width=width, block=block, exc_frac=exc_frac)
@@ -220,6 +344,11 @@ def all_gather_compressed(
         lambda a: jax.lax.all_gather(a, axis_name, axis=0, tiled=False), wire
     )
     gathered = jax.tree.map(lambda a: a.reshape((n_dev,) + a.shape[2:]), gathered)
+    _record_collective(
+        "all_gather", axis_name,
+        raw_bytes=n_dev * yf.size * y.dtype.itemsize,
+        wire=gathered, fused=False, decoded_elems=0,
+    )
     vals, flag = _decode_chunks(
         gathered, dtype=y.dtype, n=yf.shape[0], width=width, block=block
     )
@@ -242,14 +371,15 @@ def psum_compressed(
         return psum_compressed_ring(
             x, axis_name, width=policy.width_for(tensor_class),
             block=policy.profile.block, exc_frac=policy.profile.exc_frac,
-            out_dtype=out_dtype,
+            out_dtype=out_dtype, use_fused=policy.fused_decode_reduce,
         )
     width = policy.width_for(tensor_class)
     block = policy.profile.block
     exc = policy.profile.exc_frac
     n = int(np.prod(x.shape))
     red, f1 = reduce_scatter_compressed(
-        x, axis_name, width=width, block=block, exc_frac=exc
+        x, axis_name, width=width, block=block, exc_frac=exc,
+        use_fused=policy.fused_decode_reduce,
     )
     # The reduced chunk is a different distribution (sums of D values shift
     # exponents by ~log2(D) uniformly, which the per-block base absorbs);
@@ -265,11 +395,15 @@ def psum_compressed(
 
 def psum_compressed_ring(
     x: jax.Array, axis_name, *, width: int, block: int = 512,
-    exc_frac: float = 0.02, out_dtype=None,
+    exc_frac: float = 0.02, out_dtype=None, use_fused: bool = True,
 ):
     """Ring all-reduce with per-hop encode/decode — the paper's NEGATIVE
     baseline (Fig. 9b): every chunk is re-compressed at every hop.  Kept for
-    benchmarks/tests; the production policy uses two_shot."""
+    benchmarks/tests; the production policy uses two_shot.
+
+    The reduce-scatter-phase hops fuse decode+accumulate into the received
+    chunk (same ``decode_reduce`` streaming pass as the two-shot); the
+    all-gather-phase hops are pure decodes — nothing to fuse."""
     out_dtype = out_dtype or x.dtype
     n_dev = _axis_size(axis_name)
     if isinstance(axis_name, (tuple, list)):
@@ -282,19 +416,42 @@ def psum_compressed_ring(
     acc = xf.astype(jnp.float32)
     flag = jnp.int32(0)
 
-    def send_recv(v):
+    def hop(v, phase):
         wire = _encode_chunks(v[None], width=width, block=block, exc_frac=exc_frac)
         recv = jax.tree.map(lambda a: jax.lax.ppermute(a, axis_name, perm), wire)
-        vals, f = _decode_chunks(recv, dtype=v.dtype, n=chunk, width=width, block=block)
+        _record_collective(
+            f"ring_hop_{phase}", axis_name,
+            raw_bytes=chunk * v.dtype.itemsize, wire=wire,
+            fused=use_fused and phase == "rs",
+            decoded_elems=chunk if phase == "rs" else 0,
+        )
+        return recv
+
+    def send_recv(v):
+        recv = hop(v, "ag")
+        vals, f = _decode_chunks(recv, dtype=v.dtype, n=chunk, width=width,
+                                 block=block)
         return vals[0], f
+
+    def send_recv_reduce(v, acc_row):
+        """Fused hop: acc_row + decode(received wire) in one pass."""
+        recv = hop(v, "rs")
+        if use_fused:
+            return _decode_reduce_chunks(
+                recv, dtype=v.dtype, n=chunk, width=width, block=block,
+                acc=acc_row,
+            )
+        vals, f = _decode_chunks(recv, dtype=v.dtype, n=chunk, width=width,
+                                 block=block)
+        return acc_row + vals[0].astype(jnp.float32), f
 
     # reduce-scatter phase: hop h sends the chunk owned by (idx - h)
     send = jnp.take(acc, (idx - 0) % n_dev, axis=0)
     for h in range(n_dev - 1):
-        got, f = send_recv(send.astype(x.dtype))
-        flag = jnp.maximum(flag, f)
         slot = (idx - h - 1) % n_dev
-        send = jnp.take(acc, slot, axis=0) + got.astype(jnp.float32)
+        send, f = send_recv_reduce(send.astype(x.dtype),
+                                   jnp.take(acc, slot, axis=0))
+        flag = jnp.maximum(flag, f)
         acc = acc.at[slot].set(send)
     # all-gather phase: circulate the fully-reduced chunk
     for h in range(n_dev - 1):
@@ -331,14 +488,17 @@ def psum_compressed_hierarchical(
     width = policy.width_for(tensor_class)
     block = policy.profile.block
     exc = policy.profile.exc_frac
+    fused = policy.fused_decode_reduce
     n = int(np.prod(x.shape))
     # 1. intra-pod reduce-scatter: each device owns 1/data of the pod sum
     shard, f1 = reduce_scatter_compressed(
-        x, intra_axis, width=width, block=block, exc_frac=exc)
+        x, intra_axis, width=width, block=block, exc_frac=exc,
+        use_fused=fused)
     # 2. cross-pod all-reduce of the shard (two-shot, compressed)
     shard = shard.astype(out_dtype)
     red, f2 = reduce_scatter_compressed(
-        shard, inter_axis, width=width, block=block, exc_frac=exc)
+        shard, inter_axis, width=width, block=block, exc_frac=exc,
+        use_fused=fused)
     gat, f3 = all_gather_compressed(
         red.astype(out_dtype), inter_axis, width=width, block=block,
         exc_frac=exc)
@@ -376,6 +536,10 @@ def all_to_all_compressed(
     recv = jax.tree.map(
         lambda a: jax.lax.all_to_all(a, axis_name, 0, 0, tiled=False), wire
     )
+    _record_collective(
+        "all_to_all", axis_name, raw_bytes=x2d.size * x.dtype.itemsize,
+        wire=wire, fused=False, decoded_elems=0,
+    )
     vals, flag = _decode_chunks(
         recv, dtype=x.dtype, n=x2d.shape[1], width=width, block=block
     )
@@ -398,6 +562,10 @@ def ppermute_compressed(
         xf[None], width=width, block=block, exc_frac=policy.profile.exc_frac
     )
     recv = jax.tree.map(lambda a: jax.lax.ppermute(a, axis_name, perm), wire)
+    _record_collective(
+        "ppermute", axis_name, raw_bytes=xf.size * x.dtype.itemsize,
+        wire=wire, fused=False, decoded_elems=0,
+    )
     vals, flag = _decode_chunks(
         recv, dtype=x.dtype, n=xf.shape[0], width=width, block=block
     )
@@ -412,39 +580,41 @@ def ppermute_compressed(
 def tree_psum_compressed(
     tree, axis_name, *, policy: CompressionPolicy, tensor_class: str = "gradient"
 ):
-    """Fuse all policy-eligible leaves into ONE flat bucket and all-reduce it
-    with a single compressed two-shot; remaining leaves use raw psum.
+    """Fuse policy-eligible leaves into per-dtype flat buckets and all-reduce
+    each with one compressed two-shot; remaining leaves use raw psum.
 
     Bucketing applies the paper's core granularity lesson (Property 1:
     compression efficiency needs large blocks) to the whole gradient pytree.
+    Buckets are grouped BY DTYPE: casting every leaf to the first leaf's
+    dtype would silently round wider leaves (e.g. f32 norms in a bf16-first
+    gradient tree), violating the losslessness guarantee.  One two-shot per
+    dtype group keeps each leaf bit-exact at its own precision.
     Returns (tree, overflow_flag).
     """
     leaves, treedef = jax.tree_util.tree_flatten(tree)
-    big_ix, small_ix = [], []
+    groups: dict = {}  # dtype name -> leaf indices, in tree order
+    small_ix = []
     for i, l in enumerate(leaves):
         # bucket-eligible: supported dtype; the bucket as a whole passes the
         # size threshold, so per-leaf size doesn't gate membership.
         if hasattr(l, "dtype") and jnp.dtype(l.dtype).name in codec.LAYOUTS:
-            big_ix.append(i)
+            groups.setdefault(jnp.dtype(l.dtype).name, []).append(i)
         else:
             small_ix.append(i)
     out = list(leaves)
     flag = jnp.int32(0)
-    if big_ix:
-        bucket_dtype = leaves[big_ix[0]].dtype
-        parts = [leaves[i].astype(bucket_dtype).reshape(-1) for i in big_ix]
+    for name in sorted(groups):
+        ixs = groups[name]
+        parts = [leaves[i].reshape(-1) for i in ixs]
         sizes = [p.shape[0] for p in parts]
-        bucket = jnp.concatenate(parts)
-        red, flag = psum_compressed(
+        bucket = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+        red, f = psum_compressed(
             bucket, axis_name, policy=policy, tensor_class=tensor_class
         )
+        flag = jnp.maximum(flag, f)
         offs = np.cumsum([0] + sizes)
-        for k, i in enumerate(big_ix):
-            out[i] = (
-                red[offs[k] : offs[k + 1]]
-                .reshape(leaves[i].shape)
-                .astype(leaves[i].dtype)
-            )
+        for k, i in enumerate(ixs):
+            out[i] = red[offs[k] : offs[k + 1]].reshape(leaves[i].shape)
     for i in small_ix:
         out[i] = psum_safe(leaves[i], axis_name)
     return jax.tree_util.tree_unflatten(treedef, out), flag

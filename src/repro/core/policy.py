@@ -36,6 +36,13 @@ class CompressionPolicy:
     # collective algorithm for all-reduce: "two_shot" (paper's recommended)
     # or "ring" (paper's negative baseline)
     allreduce_algorithm: str = "two_shot"
+    # fused decode+reduce on the receive side of reduce-scatter (paper §3.4,
+    # the modified CopyReducePacks): decompression streams straight into the
+    # f32 accumulator instead of materializing decoded floats in HBM.  The
+    # fused and unfused paths are bit-identical (both accumulate in
+    # device-index order); this knob exists for A/B roofline accounting and
+    # as an escape hatch.
+    fused_decode_reduce: bool = True
 
     def should_compress(
         self, x, axis_name: str, *, tensor_class: str = "gradient"
@@ -60,13 +67,49 @@ class CompressionPolicy:
 
 @dataclasses.dataclass(frozen=True)
 class WireReport:
-    """Accounting record emitted by compressed collectives for the roofline."""
+    """Accounting record emitted by compressed collectives for the roofline.
+
+    Reports are recorded at TRACE time (wire shapes are static, so the
+    numbers are exact regardless of data) via :func:`record_wire_report`;
+    the roofline (``roofline/analysis.py``) and benchmarks drain them with
+    :func:`wire_reports` after tracing the step under test.
+
+    ``decode_hbm_bytes`` is the redundant decoded-float HBM round-trip an
+    UNFUSED receive side incurs between decode and reduce (write + re-read
+    of the materialized f32 chunks, 8 B/element).  It is recorded whether or
+    not the wire ran fused; ``fused`` says which way it went — the bytes
+    were *paid* (``fused=False``) or *eliminated* (``fused=True``).  It is 0
+    for collectives whose decode output *is* the result (all-gather, P2P):
+    there is no redundant materialization to eliminate.
+    """
 
     name: str
     axis: str
     raw_bytes: int
     wire_bytes: int
+    fused: bool = False
+    decode_hbm_bytes: int = 0
 
     @property
     def ratio(self) -> float:
         return self.wire_bytes / max(self.raw_bytes, 1)
+
+
+# Trace-time wire accounting sink.  jit caching means each compiled program
+# records its collectives once per trace; callers clear before tracing the
+# program they want to account.
+_WIRE_REPORTS: list = []
+
+
+def record_wire_report(report: WireReport) -> None:
+    """Append a trace-time accounting record (called by the collectives)."""
+    _WIRE_REPORTS.append(report)
+
+
+def clear_wire_reports() -> None:
+    _WIRE_REPORTS.clear()
+
+
+def wire_reports() -> tuple:
+    """All WireReports recorded since the last clear, in emission order."""
+    return tuple(_WIRE_REPORTS)

@@ -31,7 +31,21 @@ from repro.core.compressed_collectives import (
     _encode_chunks,
     _pad_flat,
 )
-from repro.core.policy import CompressionPolicy
+from repro.core.policy import (CompressionPolicy, WireReport,
+                               record_wire_report)
+
+
+def _record_p2p(name: str, axis_name, *, n_elems: int, dtype,
+                lo_planes, exp_wire: dict) -> None:
+    """Trace-time WireReport for a P2P strategy (decode output is the
+    result, so there is no decoded-float round-trip to account)."""
+    wire_bytes = int(lo_planes.size * 4) + sum(
+        int(np.prod(v.shape)) * v.dtype.itemsize for v in exp_wire.values())
+    record_wire_report(WireReport(
+        name=name, axis=str(axis_name),
+        raw_bytes=int(n_elems) * jnp.dtype(dtype).itemsize,
+        wire_bytes=wire_bytes, fused=False, decode_hbm_bytes=0,
+    ))
 
 
 def _permute(a, axis_name, perm):
@@ -64,6 +78,8 @@ def split_send(
         "exc_raw": pk.exc_raw, "overflow": pk.overflow,
     }
     exp_recv = jax.tree.map(lambda a: _permute(a, axis_name, perm), exp_wire)
+    _record_p2p("split_send", axis_name, n_elems=xf.shape[0], dtype=x.dtype,
+                lo_planes=lo_planes, exp_wire=exp_wire)
 
     # Receiver: decode (the split's inverse is a pure bit-merge).
     rpk = packing.PackedPlane(
@@ -105,6 +121,8 @@ def encode_send(
     }
     del pk  # barriered payload is the only one that may ship
     recv = jax.tree.map(lambda a: _permute(a, axis_name, perm), wire)
+    _record_p2p("encode_send", axis_name, n_elems=xf.shape[0], dtype=x.dtype,
+                lo_planes=lo_planes, exp_wire=wire)
     rpk = packing.PackedPlane(
         payload=recv["payload"], bases=recv["bases"], exc_idx=recv["exc_idx"],
         exc_raw=recv["exc_raw"], overflow=recv["overflow"], width=width,
@@ -129,8 +147,18 @@ def chunked_pipeline_send(
     analogous cost is per-chunk kernel/collective overhead and worse
     VPU utilization at small block counts."""
     n = int(np.prod(x.shape))
-    xf = _pad_flat(x.reshape(-1), chunks * block)
-    parts = xf.reshape(chunks, -1)
+    if n == 0:
+        raise ValueError("chunked_pipeline_send: empty tensor")
+    # degenerate-size guard: with n < chunks*block (or block-rounding of the
+    # per-chunk length) the trailing chunks would be pure padding — an
+    # encode+send of all-zero rows per chunk.  Derive the per-chunk length
+    # first, then the effective chunk count, so every chunk carries data.
+    ideal = -(-n // max(chunks, 1))  # ceil(n / chunks)
+    per = -(-ideal // block) * block  # rounded up to a block multiple
+    chunks = -(-n // per)
+    xf = _pad_flat(x.reshape(-1), chunks * per)
+    parts = xf.reshape(chunks, per)
+    assert per * (chunks - 1) < n <= per * chunks, (x.shape, chunks, block)
     outs, flag = [], jnp.int32(0)
     token = None
     for k in range(chunks):

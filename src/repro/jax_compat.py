@@ -1,0 +1,136 @@
+"""Compatibility shims for older jax releases (the container ships 0.4.x).
+
+The codebase is written against the jax >= 0.6 public API surface:
+
+  * ``jax.shard_map`` — top-level, keyword ``mesh=``/``axis_names=``/
+    ``check_vma=``, and mesh inference for *nested* calls (an inner
+    ``shard_map`` without ``mesh`` reuses the mesh of the enclosing one);
+  * ``jax.lax.axis_size`` — static axis size inside manual regions;
+  * ``jax.sharding.AxisType`` and ``jax.make_mesh(..., axis_types=...)``.
+
+On import this module backfills whichever of those the installed jax is
+missing, mapping them onto the 0.4.x equivalents:
+
+  * ``jax.experimental.shard_map.shard_map`` with ``auto=`` (the complement
+    of ``axis_names``) and ``check_rep=`` (for ``check_vma``).  Nested-mesh
+    inference is provided by a thread-local mesh stack pushed while the
+    wrapped body traces;
+  * ``jax.lax.psum(1, axis)`` — which jax folds to a static int — for
+    ``axis_size``;
+  * a plain ``jax.make_mesh`` call that drops ``axis_types`` (0.4.x meshes
+    have no axis types; every axis behaves as Auto outside shard_map, which
+    is exactly how this repo uses them).
+
+Importing on a current jax is a no-op: every patch is gated on the public
+attribute being absent.  ``repro/__init__.py`` imports this module, so any
+``import repro.*`` (tests, drivers, benchmarks) is covered.
+"""
+from __future__ import annotations
+
+import enum
+import threading
+
+import jax
+import numpy as np
+
+_tls = threading.local()
+
+
+def _mesh_stack():
+    if not hasattr(_tls, "stack"):
+        _tls.stack = []
+    return _tls.stack
+
+
+# -- jax.sharding.AxisType ----------------------------------------------------
+
+if not hasattr(jax.sharding, "AxisType"):
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+# -- jax.make_mesh(..., axis_types=...) --------------------------------------
+
+def _make_mesh_accepts_axis_types() -> bool:
+    import inspect
+
+    try:
+        return "axis_types" in inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):  # pragma: no cover - exotic builds
+        return True
+
+
+if not _make_mesh_accepts_axis_types():
+    _orig_make_mesh = jax.make_mesh
+
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+        del axis_types  # 0.4.x meshes are untyped (Auto everywhere)
+        return _orig_make_mesh(tuple(axis_shapes), tuple(axis_names),
+                               devices=devices)
+
+    jax.make_mesh = make_mesh
+
+
+# -- jax.lax.axis_size --------------------------------------------------------
+
+if not hasattr(jax.lax, "axis_size"):
+    def axis_size(axis_name):
+        # psum of the literal 1 is folded statically to the axis size
+        return jax.lax.psum(1, axis_name)
+
+    jax.lax.axis_size = axis_size
+
+
+# -- jax.shard_map ------------------------------------------------------------
+
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _shard_map_04x
+
+    def shard_map(f, *, mesh=None, in_specs, out_specs, axis_names=None,
+                  check_vma=True, check_rep=None):
+        """jax>=0.6-style shard_map on the 0.4.x implementation.
+
+        ``axis_names`` are the MANUAL axes; the remaining mesh axes are
+        passed as ``auto``.  ``mesh=None`` (nested use) resolves to the mesh
+        of the innermost enclosing compat shard_map at trace time.
+        """
+        if check_rep is None:
+            check_rep = check_vma
+
+        def call(*args):
+            m = mesh if mesh is not None else (
+                _mesh_stack()[-1] if _mesh_stack() else None)
+            if m is None:
+                raise ValueError(
+                    "shard_map compat: no mesh given and no enclosing "
+                    "shard_map to inherit one from")
+            manual = set(axis_names) if axis_names else set(m.axis_names)
+            auto = frozenset(set(m.axis_names) - manual)
+
+            def body(*a):
+                _mesh_stack().append(m)
+                try:
+                    return f(*a)
+                finally:
+                    _mesh_stack().pop()
+
+            return _shard_map_04x(
+                body, m, in_specs=in_specs, out_specs=out_specs,
+                check_rep=check_rep, auto=auto,
+            )(*args)
+
+        return call
+
+    jax.shard_map = shard_map
+
+
+def assert_compat() -> None:
+    """Cheap sanity check used by tests: the patched surface is present."""
+    assert hasattr(jax, "shard_map")
+    assert hasattr(jax.lax, "axis_size")
+    assert hasattr(jax.sharding, "AxisType")
+    assert isinstance(np.prod([1]), np.integer) or True

@@ -7,9 +7,17 @@ round-trip for the decoded floats; this kernel streams the packed wire
 (payload bit-planes + per-block bases + lo planes) and an f32 accumulator
 through VMEM once, emitting the updated accumulator.
 
-One grid step handles TILE_G groups of 32 elements.  The per-group base is
-pre-broadcast outside (bases are n/512 elements — negligible traffic) so
-the kernel's index maps stay rectangular.
+The exponent decode implements the wire format of ``packing.pack_exponents``
+exactly, including the zero-escape (residual 0 -> exponent 0; residual r>0
+-> ``r + base - 1``), so for non-exception blocks the fused output is
+bit-identical to ``unpack_exponents`` + ``merge_planes`` + add.  Exception
+blocks (whose payload is clamped garbage by construction) are patched up by
+the caller AFTER the fused pass from the raw ``exc_idx``/``exc_raw`` wire —
+see ``compressed_collectives._decode_reduce_chunks``.
+
+One grid step handles TILE_G groups of 32 elements.  The per-block base is
+pre-broadcast to a per-GROUP base outside (bases are n/512 elements —
+negligible traffic) so the kernel's index maps stay rectangular.
 """
 from __future__ import annotations
 
@@ -33,7 +41,17 @@ def _decode_reduce_kernel(
     for b in range(width):
         word = pay_ref[:, b][:, None]
         resid = resid | (((word >> pos) & jnp.uint32(1)) << jnp.uint32(b))
-    exp = resid + base_ref[...]  # (TILE_G, 32) + (TILE_G, 1)
+    # zero-escape decode (wire format of packing.pack_exponents): code 0 is
+    # exponent 0 (zeros/subnormals); code r>0 is exponent r + base - 1.  The
+    # exponent plane is uint8 by format — mask to 8 bits so clamped garbage
+    # in exception blocks (patched by the caller) wraps identically to the
+    # unfused unpack_exponents path.
+    base = base_ref[...]  # (TILE_G, 1), broadcasts against (TILE_G, 32)
+    exp = jnp.where(
+        resid == 0,
+        jnp.uint32(0),
+        (resid + base - jnp.uint32(1)) & jnp.uint32(0xFF),
+    )
 
     lo = jnp.zeros((lo_ref.shape[0], GROUP), jnp.uint32)
     for b in range(lay.lo_bits):

@@ -29,11 +29,13 @@ def split_with_stats(x: jax.Array, block: int = 512):
 # --- decode_reduce -----------------------------------------------------------
 
 def decode_reduce(payload, lo_planes, group_bases, acc, dtype_name: str, width: int):
+    """Zero-escape wire decode + f32 accumulate (packing.pack_exponents
+    format: code 0 -> exponent 0, code r>0 -> r + base - 1)."""
     lay = codec.LAYOUTS[dtype_name]
     resid = packing.bitplane_unpack(payload, width)
-    exp = (
-        resid.reshape(group_bases.shape[0], packing.GROUP)
-        + group_bases[:, None]
+    r2 = resid.reshape(group_bases.shape[0], packing.GROUP)
+    exp = jnp.where(
+        r2 == 0, jnp.uint32(0), r2 + group_bases[:, None].astype(jnp.uint32) - 1
     ).reshape(-1).astype(jnp.uint8)
     lo = packing.bitplane_unpack(lo_planes, lay.lo_bits).astype(lay.uint_dtype)
     vals = codec.merge_planes(exp, lo, lay.dtype, (resid.shape[0],))

@@ -104,9 +104,12 @@ def shard_tree_by_plan(plan_tree, tree, idx, n_dp: int):
 @lru_cache(maxsize=None)
 def _make_gather(axes: tuple, w_fwd: int, w_bwd: int, block: int,
                  exc_frac: float, compressed: bool,
-                 local_shape: tuple = None, dtype_name: str = None):
+                 local_shape: tuple = None, dtype_name: str = None,
+                 use_fused: bool = True):
     """Factory: custom-vjp'd last-dim all-gather over manual ``axes``.
 
+    The backward reduce-scatter of the cotangent uses the fused
+    decode+reduce receive when ``use_fused`` (policy.fused_decode_reduce).
     ``local_shape``/``dtype_name`` are part of the cache key so the VJP can
     reconstruct the shard without carrying non-JAX residuals."""
     local_shape = tuple(local_shape)
@@ -152,7 +155,7 @@ def _make_gather(axes: tuple, w_fwd: int, w_bwd: int, block: int,
         if compressed:
             red, _ = reduce_scatter_compressed(
                 rows.reshape(-1).astype(dtype), tuple(axes), width=w_bwd,
-                block=block, exc_frac=exc_frac,
+                block=block, exc_frac=exc_frac, use_fused=use_fused,
             )
             red = red[:ln]
         else:
@@ -183,10 +186,11 @@ def _raw_ag(flat, axes):
 
 def _raw_rs(rows, axes):
     """Raw reduce-scatter as all_to_all + local sum (wire-byte-identical to
-    native RS; bitcast wire avoids XLA-CPU bf16 promotion/crash)."""
-    from repro.core.compressed_collectives import raw_all_to_all
+    native RS; bitcast wire avoids XLA-CPU bf16 promotion/crash).  Device-
+    index accumulation order, matching the compressed fused path."""
+    from repro.core.compressed_collectives import _seq_sum, raw_all_to_all
     recv = raw_all_to_all(rows, tuple(axes), 0, 0)
-    return jnp.sum(recv.astype(jnp.float32), axis=0).astype(rows.dtype)
+    return _seq_sum(recv, jnp.float32).astype(rows.dtype)
 
 
 def gather_tree(plan: FsdpPlan, tree, *, dp_axes, policy: CompressionPolicy):
@@ -210,6 +214,7 @@ def gather_tree(plan: FsdpPlan, tree, *, dp_axes, policy: CompressionPolicy):
             policy.profile.exc_frac,
             policy.enabled,
             tuple(l.shape), jnp.dtype(l.dtype).name,
+            policy.fused_decode_reduce,
         )
         full, f = gfn(l)
         flag = jnp.maximum(flag, jax.lax.stop_gradient(f))

@@ -176,9 +176,12 @@ def zero1_step(
     for name, gb, sl in zip(meta.dtype_names, gbuckets, meta.shard_lens):
         nbytes = gb.size * gb.dtype.itemsize
         if policy.enabled and nbytes * n_dp >= policy.min_bytes:
+            # fused receive (policy.fused_decode_reduce): remote packed
+            # chunks stream straight into the f32 grad-shard accumulator
             gs, f = reduce_scatter_compressed(
                 gb, dp_axes, width=policy.width_for("gradient"),
                 block=policy.profile.block, exc_frac=policy.profile.exc_frac,
+                use_fused=policy.fused_decode_reduce,
             )
             flag = jnp.maximum(flag, f)
         else:
@@ -243,12 +246,14 @@ def _raw_reduce_scatter(x, axes, n_dp):
     Same wire bytes as a native reduce-scatter (each device sends n*(k-1)/k)
     and the same structure as the compressed path, so the roofline's
     raw-vs-compressed collective-byte comparison is apples-to-apples.  Also
-    sidesteps XLA-CPU bf16-collective promotion (bitcast wire)."""
-    from repro.core.compressed_collectives import raw_all_to_all
+    sidesteps XLA-CPU bf16-collective promotion (bitcast wire).  Accumulates
+    in device-index order (``_seq_sum``) — the same order as the compressed
+    fused/unfused paths, so compressed-vs-raw training is bit-comparable."""
+    from repro.core.compressed_collectives import _seq_sum, raw_all_to_all
     x2 = x.reshape(n_dp, -1)
     ax = tuple(axes) if isinstance(axes, (tuple, list)) else axes
     recv = raw_all_to_all(x2, ax, 0, 0)
-    return jnp.sum(recv.astype(jnp.float32), axis=0)
+    return _seq_sum(recv, jnp.float32)
 
 
 def _raw_all_gather(x, axes):

@@ -193,6 +193,56 @@ def analyze_cell(json_path: str, hlo_path: Optional[str] = None) -> Roofline:
     )
 
 
+# ---------------------------------------------------------------------------
+# Measured wire accounting from collective-emitted WireReports.
+#
+# The compressed collectives record a trace-time WireReport per wire
+# (policy.record_wire_report): raw vs packed wire bytes, whether the
+# receive side ran the FUSED decode+reduce, and the decoded-float HBM
+# round-trip the unfused path would incur.  These are *measured* static
+# sizes of the actual encoded buffers — complementary to the HLO-parsed
+# collective_bytes above (which sees the same packed operands on the wire).
+# ---------------------------------------------------------------------------
+
+def summarize_wire_reports(reports) -> dict:
+    """Aggregate a sequence of WireReports into roofline-ready totals.
+
+    Returns a dict with total raw/wire bytes, the overall compression
+    ratio, the decoded-float HBM round-trip bytes still *paid* (unfused
+    receives) and the bytes *eliminated* (fused receives), plus a
+    per-collective-name breakdown.  ``decode_hbm_bytes`` on a report is the
+    potential round-trip; the ``fused`` flag decides which bucket it lands
+    in."""
+    by_name: dict = {}
+
+    def blank(name=None):
+        d = {"n": 0, "raw_bytes": 0, "wire_bytes": 0,
+             "decode_hbm_paid": 0, "decode_hbm_eliminated": 0, "n_fused": 0}
+        if name is not None:
+            d["name"] = name
+        return d
+
+    tot = blank()
+    for r in reports:
+        for d in (tot, by_name.setdefault(r.name, blank(r.name))):
+            d["n"] += 1
+            d["raw_bytes"] += r.raw_bytes
+            d["wire_bytes"] += r.wire_bytes
+            key = "decode_hbm_eliminated" if r.fused else "decode_hbm_paid"
+            d[key] += r.decode_hbm_bytes
+            d["n_fused"] += int(r.fused)
+    tot["ratio"] = tot["wire_bytes"] / max(tot["raw_bytes"], 1)
+    for d in by_name.values():
+        d["ratio"] = d["wire_bytes"] / max(d["raw_bytes"], 1)
+    tot["by_name"] = by_name
+    return tot
+
+
+def wire_report_seconds(reports, *, link_bw: float = ICI_BW) -> float:
+    """First-order collective time for the reported wires (bytes / bw)."""
+    return sum(r.wire_bytes for r in reports) / link_bw
+
+
 def markdown_row(r: Roofline) -> str:
     return (f"| {r.arch} | {r.shape} | {r.mesh} | "
             f"{r.t_compute*1e3:.2f} | {r.t_memory*1e3:.2f} | "

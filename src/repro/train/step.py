@@ -19,6 +19,17 @@ Structure (validated for lowering on 512-device meshes):
 Losslessness: every compressed wire carries an overflow flag; when
 ``guard_overflow`` the whole state update is masked out on overflow and the
 runtime retries the step with compression disabled (runtime/fault_tolerance).
+
+Fused execution (paper §3.4): every DP reduce-scatter receive — the zero1
+gradient sync and the FSDP gather's backward — streams remote packed chunks
+through the fused decode+reduce kernel into the f32 accumulator
+(``policy.fused_decode_reduce``, default on), eliminating the decoded-float
+HBM round-trip of decode-then-sum.  Fused and unfused paths are
+bit-identical (device-index accumulation order everywhere), so the knob is
+purely a performance/accounting choice.  Each compressed wire also records
+a trace-time ``WireReport`` (see core/policy.py); tracing a step and
+draining ``policy.wire_reports()`` yields the measured wire/HBM accounting
+the roofline consumes (``roofline.analysis.summarize_wire_reports``).
 """
 from __future__ import annotations
 
@@ -607,6 +618,7 @@ def _build_fsdp_step(cfg: ArchConfig, tcfg: TrainConfig, mesh):
                 tcfg.policy.profile.exc_frac,
                 tcfg.policy.enabled,
                 tuple(lshape), jnp.dtype(moved.dtype).name,
+                tcfg.policy.fused_decode_reduce,
             )
 
             def body(lm, _gfn=gfn):

@@ -1,0 +1,93 @@
+"""Hypothesis fallback: deterministic example-based shim.
+
+The property-based tests in this suite use a tiny slice of the hypothesis
+API (``given``, ``settings(max_examples=..., deadline=...)``,
+``strategies.integers``, ``strategies.lists``).  When hypothesis is
+installed (see requirements-dev.txt) the real library is re-exported and
+the full property-based run happens.  When it is absent (the tier-1
+container), ``given`` degrades to a deterministic example-based sweep: a
+seeded ``random.Random`` draws ``max_examples`` (capped) examples per test,
+so the suite still collects and exercises the same code paths with
+reproducible inputs — weaker than shrinking/coverage-guided search, but a
+real multi-example test rather than a skip.
+
+Usage in test modules::
+
+    from _compat import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+try:  # real hypothesis when available — full property-based run
+    from hypothesis import given, settings
+    from hypothesis import strategies
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    _MAX_EXAMPLES_CAP = 25  # keep the fallback sweep tier-1-fast
+
+    class _Strategy:
+        """A draw function wrapper mirroring the strategy objects we use."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value: int = 0, max_value: int = 1 << 30):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10):
+            def draw(rng: random.Random):
+                k = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(k)]
+
+            return _Strategy(draw)
+
+    strategies = _StrategiesModule()
+
+    def settings(max_examples: int = 20, deadline=None, **_kw):
+        """Records max_examples on the function (deadline is ignored)."""
+
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strats):
+        """Runs the test body once per deterministic drawn example."""
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = min(
+                    getattr(wrapper, "_compat_max_examples",
+                            getattr(fn, "_compat_max_examples", 20)),
+                    _MAX_EXAMPLES_CAP,
+                )
+                seed = zlib.crc32(fn.__name__.encode())  # stable across runs
+                rng = random.Random(seed)
+                for _ in range(n):
+                    fn(*args, *[s.draw(rng) for s in strats], **kwargs)
+
+            # tolerate @settings applied outside @given
+            wrapper._compat_max_examples = getattr(
+                fn, "_compat_max_examples", 20)
+            # hide the original parameters from pytest: the strategy args
+            # are supplied by the wrapper, not fixtures.  (Limitation of the
+            # shim: @given-tests cannot mix in pytest fixtures — none do.)
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco

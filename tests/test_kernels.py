@@ -37,22 +37,28 @@ def test_plane_split_kernel_matches_ref(dt, tiles):
 @pytest.mark.parametrize("dt", ["bfloat16", "float32"])
 @pytest.mark.parametrize("width", [3, 5, 8])
 def test_decode_reduce_kernel_matches_ref(dt, width):
+    """Kernel vs jnp oracle on the REAL wire format (pack_exponents
+    zero-escape; exception blocks carry clamped payload — the kernel and
+    oracle must agree on those too, the collective patches them after)."""
     lay = codec.LAYOUTS[dt]
     rng = np.random.default_rng(8)
     n = 32 * TILE_G
-    x = jnp.asarray(rng.normal(0, 1, n), lay.dtype)
+    x = np.asarray(rng.normal(0, 1, n))
+    x[rng.random(n) < 0.05] = 0.0  # exact zeros: exercise the escape
+    x = jnp.asarray(x, lay.dtype)
     exp, lo = codec.split_planes(x)
-    blocks = exp.reshape(-1, 512)
-    bases = jnp.min(blocks, axis=-1).astype(jnp.uint32)
-    resid = (blocks.astype(jnp.int32) - bases[:, None].astype(jnp.int32)).astype(jnp.uint32)
-    resid = jnp.minimum(resid, (1 << width) - 1)
-    payload = packing.bitplane_pack(resid.reshape(-1), width)
+    pk = packing.pack_exponents(exp, width=width, block=512)
+    gb = jnp.repeat(pk.bases.astype(jnp.uint32), 512 // 32)
     lo_planes = packing.bitplane_pack(lo.astype(jnp.uint32), lay.lo_bits)
-    gb = jnp.repeat(bases, 512 // 32)
     acc = jnp.asarray(rng.normal(0, 1, n), jnp.float32)
-    got = ops.decode_reduce(payload, lo_planes, gb, acc, dt, width, use_pallas=True)
-    want = ref.decode_reduce(payload, lo_planes, gb, acc, dt, width)
+    got = ops.decode_reduce(pk.payload, lo_planes, gb, acc, dt, width,
+                            use_pallas=True)
+    want = ref.decode_reduce(pk.payload, lo_planes, gb, acc, dt, width)
     assert (got == want).all()
+    if width == 8:  # no exception blocks possible: exact vs unfused decode
+        full = codec.merge_planes(packing.unpack_exponents(pk),
+                                  lo.astype(lay.uint_dtype), lay.dtype, (n,))
+        assert (got == acc + full.astype(jnp.float32)).all()
 
 
 @pytest.mark.parametrize("per", [1, 8, 64])

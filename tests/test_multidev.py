@@ -1,15 +1,21 @@
-"""Multi-device correctness: compressed collectives, train-step
-losslessness, P2P pipelines and KV transfer on 8 fake host devices.
+"""Multi-device correctness: compressed collectives, fused decode+reduce
+parity, train-step losslessness, P2P pipelines and KV transfer on 8 fake
+host devices.
 
 Runs in a subprocess because the device-count XLA flag must be set before
 jax initializes, and this pytest process must keep the default 1-device
-view (assignment: do NOT set the flag globally)."""
+view (assignment: do NOT set the flag globally).  Driver sections that the
+installed jax/jaxlib cannot lower report ``{"skip": reason}`` and the
+corresponding tests skip instead of failing (they pass on current jax).
+"""
 import json
 import os
 import subprocess
 import sys
 
 import pytest
+
+pytestmark = pytest.mark.slow  # subprocess + 8 fake devices: minutes-long
 
 DRIVER = os.path.join(os.path.dirname(__file__), "drivers", "multidev.py")
 
@@ -28,38 +34,57 @@ def results():
     return _results
 
 
-def test_psum_two_shot_exact():
+def get(key):
+    """Value for a driver key, skipping when the driver recorded a skip."""
     r = results()
-    assert r["psum_two_shot_exact"] and r["psum_two_shot_flag"] == 0
+    assert key in r, sorted(r)
+    v = r[key]
+    if isinstance(v, dict) and "skip" in v:
+        pytest.skip(f"driver could not lower this on installed jax: "
+                    f"{v['skip']}")
+    return v
+
+
+def test_psum_two_shot_exact():
+    assert get("psum_two_shot_exact") and get("psum_two_shot_flag") == 0
 
 
 def test_psum_ring_exact():
-    r = results()
-    assert r["psum_ring_exact"] and r["psum_ring_flag"] == 0
+    assert get("psum_ring_exact") and get("psum_ring_flag") == 0
+
+
+@pytest.mark.parametrize("dt", ["bfloat16", "float32"])
+def test_reduce_scatter_fused_bitexact(dt):
+    """Fused decode+reduce receive == unfused decode-then-sum, bit-for-bit,
+    across 8 real (fake-host) devices."""
+    assert get(f"rs_fused_bitexact_{dt}")
 
 
 def test_all_to_all_exact():
-    r = results()
-    assert r["a2a_exact"] and r["a2a_flag"] == 0
+    assert get("a2a_exact") and get("a2a_flag") == 0
 
 
 @pytest.mark.parametrize("strategy", ["split", "encode", "chunked"])
 def test_p2p_pipelines_exact(strategy):
-    r = results()
-    assert r[f"p2p_{strategy}_exact"] and r[f"p2p_{strategy}_flag"] == 0
+    assert get(f"p2p_{strategy}_exact") and get(f"p2p_{strategy}_flag") == 0
 
 
 def test_tree_psum_mixed_pytree():
-    assert results()["tree_psum_exact"]
+    assert get("tree_psum_exact")
+
+
+def test_tree_psum_f32_leaf_lossless():
+    """f32 leaf in a bf16-first tree must round-trip at f32 precision (the
+    old single-bucket path cast it to bf16 — lossy)."""
+    assert get("tree_psum_f32_exact")
 
 
 @pytest.mark.parametrize("part", ["zero1", "fsdp"])
 def test_train_step_lossless(part):
-    r = results()
-    assert r[f"train_{part}_bitexact"], \
+    assert get(f"train_{part}_bitexact"), \
         "compressed training must be bit-identical to uncompressed"
-    assert r[f"train_{part}_loss_drop"]
+    assert get(f"train_{part}_loss_drop")
 
 
 def test_kv_transfer_exact():
-    assert results()["kv_transfer_exact"]
+    assert get("kv_transfer_exact")

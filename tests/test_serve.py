@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # whole-model decode loops: minutes-long
+
 from repro import configs
 from repro.models import registry, transformer
 from repro.p2p.engine import Compressor

@@ -7,8 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _compat import given, settings, strategies as st  # hypothesis or fallback
 
 from repro import configs
 from repro.core.policy import CompressionPolicy
