@@ -1,0 +1,180 @@
+"""Persistent collective runtime: plan-cache hit rate + trace-time savings.
+
+The paper's Uzip-NCCL (§3.3) decides the compression schedule once and
+reuses it inside NCCL's persistent kernels.  Our TPU/XLA analogue compiles
+a ``CommPlan`` per step signature (``src/repro/sched/``); this benchmark
+measures what the reuse buys at TRACE time — the phase the plan cache
+actually accelerates (the lowered HLO is identical by construction, which
+the parity section verifies bitwise):
+
+  1. repeated traces of the planless ``tree_psum_compressed`` re-derive
+     bucketing/gating/width decisions every time;
+  2. repeated traces of ``psum_with_plan`` hit the cached plan from trace
+     2 on (hit-rate column), skipping the decision logic and its
+     ``eval_shape`` wire-size probes.
+
+Usage:
+  python -m benchmarks.fig_sched            # full sweep
+  python -m benchmarks.fig_sched --smoke    # <30 s CI-gate mode
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import table
+
+
+def _abstract_mesh(k: int, name: str = "data"):
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(((name, k),))
+    except TypeError:  # newer ctor signature
+        return AbstractMesh((k,), (name,))
+
+
+def sched_compile_fresh(tree, pol, k: int):
+    """One uncached plan compile — the decision work a cache hit skips."""
+    from repro.sched import compile as sc
+
+    return sc.compile_psum_plan(tree, "data", policy=pol, n_dev=k)
+
+
+def _grad_tree(n_bf16: int, n_f32: int):
+    import jax
+    import jax.numpy as jnp
+
+    return jax.eval_shape(lambda: {
+        "wq": jnp.zeros((n_bf16 // 2,), jnp.bfloat16),
+        "wk": jnp.zeros((n_bf16 // 4,), jnp.bfloat16),
+        "wv": jnp.zeros((n_bf16 // 4,), jnp.bfloat16),
+        "norm": jnp.zeros((n_f32,), jnp.float32),
+        "step": jnp.zeros((), jnp.int32),
+    })
+
+
+def _time_traces_interleaved(fn_a, fn_b, n_traces: int):
+    """Alternate the two tracers so CPU-frequency drift and background
+    load hit both equally (single-run trace times swing ±2x on shared
+    CPUs; min-of-tail plus interleaving keeps the comparison honest)."""
+    ta, tb = [], []
+    for _ in range(n_traces):
+        for fn, ts in ((fn_a, ta), (fn_b, tb)):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+    return ta, tb
+
+
+def run(k: int = 8, smoke: bool = False):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro import sched
+    from repro.core import compressed_collectives as cc
+    from repro.core.policy import CompressionPolicy
+
+    n_traces = 3 if smoke else 8
+    n_bf16 = (1 << 18) if smoke else (1 << 22)  # elements
+    n_f32 = (1 << 14) if smoke else (1 << 18)
+    pol = CompressionPolicy(min_bytes=0)
+    mesh = _abstract_mesh(k)
+    tree = _grad_tree(n_bf16, n_f32)
+    cache = sched.PlanCache()
+
+    def shmap(fn):
+        return jax.shard_map(fn, mesh=mesh, in_specs=(P(),),
+                             out_specs=(P(), P()), axis_names={"data"},
+                             check_vma=False)
+
+    def trace_planless():
+        jax.eval_shape(shmap(
+            lambda t: cc.tree_psum_compressed(t, "data", policy=pol)), tree)
+
+    def trace_planned():
+        jax.eval_shape(shmap(
+            lambda t: sched.psum_with_plan(t, "data", policy=pol,
+                                           cache=cache)), tree)
+
+    t_planless, t_planned = _time_traces_interleaved(
+        trace_planless, trace_planned, n_traces)
+    stats = cache.stats
+
+    # The deterministic saving is the plan COMPILE cost (bucketing, gating,
+    # width selection, eval_shape wire-size probes): paid once, skipped on
+    # every cache hit.  Steady-state trace times are reported as context
+    # but are statistically indistinguishable on a noisy shared CPU — both
+    # paths trace the identical collective ops by construction.
+    t_compile = min(_time_traces_interleaved(
+        lambda: sched_compile_fresh(tree, pol, k), lambda: None, 3)[0])
+    steady_planless = min(t_planless[1:])
+    steady_planned = min(t_planned[1:])
+    rows = [
+        ["planless", f"{t_planless[0]*1e3:.1f}",
+         f"{steady_planless*1e3:.1f}", "-", "-"],
+        ["plan-driven", f"{t_planned[0]*1e3:.1f}",
+         f"{steady_planned*1e3:.1f}",
+         f"{stats.hits}/{stats.hits + stats.misses}",
+         f"{stats.hits * t_compile*1e3:.1f}"],
+    ]
+    table(
+        f"Persistent runtime — step-signature re-trace cost "
+        f"({(n_bf16 * 2 + n_f32 * 4) / 2**20:.0f} MB gradient tree, k={k}, "
+        f"{n_traces} traces)",
+        ["path", "first trace (ms)", "steady trace (ms)", "plan-cache hits",
+         "decision work skipped (ms)"], rows)
+    plan = next(iter(cache._plans.values()))
+    s = plan.summary()
+    print(f"  compiled plan: {s['n_buckets']} buckets {s['paths']}, "
+          f"backend={s['backend']} use_pallas={s['use_pallas']}, expected "
+          f"wire {s['wire_bytes']/2**20:.2f} MiB / raw "
+          f"{s['raw_bytes']/2**20:.2f} MiB (ratio {s['ratio']:.3f})")
+    print(f"  plan-cache hit rate: {stats.hit_rate:.2f} "
+          f"({stats.hits} hits, {stats.misses} compile); one compile = "
+          f"{t_compile*1e3:.1f} ms of decision logic, amortized across hits")
+
+    # -- parity: the cached plan's execution is bit-identical ----------------
+    mesh1 = jax.make_mesh((1,), ("data",))
+    rng = np.random.default_rng(0)
+    small = {
+        "wq": jnp.asarray(rng.normal(0, 0.02, 1 << 14), jnp.bfloat16),
+        "norm": jnp.asarray(rng.normal(0, 1, 1 << 12), jnp.float32),
+    }
+    run1 = lambda f: jax.jit(jax.shard_map(
+        f, mesh=mesh1, in_specs=(P(),), out_specs=(P(), P()),
+        axis_names={"data"}, check_vma=False))(small)
+    a, _ = run1(lambda t: sched.psum_with_plan(t, "data", policy=pol,
+                                               cache=sched.PlanCache()))
+    b, _ = run1(lambda t: cc.tree_psum_compressed(t, "data", policy=pol))
+    bitcast = jax.lax.bitcast_convert_type
+    parity = all(
+        bool(jnp.all(bitcast(a[kk], jnp.uint16 if a[kk].dtype == jnp.bfloat16
+                             else jnp.uint32)
+                     == bitcast(b[kk], jnp.uint16 if b[kk].dtype == jnp.bfloat16
+                                else jnp.uint32)))
+        for kk in small)
+    print(f"  executor parity vs planless: "
+          f"{'BIT-IDENTICAL' if parity else 'MISMATCH'}")
+    return {
+        "hit_rate": stats.hit_rate,
+        "hits": stats.hits,
+        "misses": stats.misses,
+        "compile_s": t_compile,
+        "first_trace_planless_s": t_planless[0],
+        "first_trace_planned_s": t_planned[0],
+        "steady_planless_s": steady_planless,
+        "steady_planned_s": steady_planned,
+        "parity": parity,
+        "plan": s,
+    }
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small tree, 3 traces — runs in <30 s")
+    ap.add_argument("-k", type=int, default=8)
+    args = ap.parse_args()
+    run(k=args.k, smoke=args.smoke)

@@ -22,6 +22,7 @@ MODULES = [
     ("fig13", "benchmarks.fig13_dtypes"),
     ("fig15", "benchmarks.fig15_strategies"),
     ("fig16", "benchmarks.fig16_resources"),
+    ("sched", "benchmarks.fig_sched"),
 ]
 
 

@@ -233,7 +233,7 @@ def _record_collective(name: str, axis_name, *, raw_bytes: int, wire: dict,
 
 def _decode_reduce_chunks(
     wire: dict, *, dtype, n: int, width: int, block: int,
-    acc: jax.Array | None = None, use_pallas: bool = False,
+    acc: jax.Array | None = None, use_pallas: bool | None = None,
 ):
     """Fused streaming decode+reduce over received chunks (paper §3.4).
 
@@ -289,7 +289,7 @@ def _decode_reduce_chunks(
 def reduce_scatter_compressed(
     x: jax.Array, axis_name, *, width: int, block: int = 512,
     exc_frac: float = 0.02, acc_dtype=jnp.float32, use_fused: bool = True,
-    use_pallas: bool = False,
+    use_pallas: bool | None = None,
 ):
     """Compressed reduce-scatter over a flat array.
 

@@ -13,6 +13,7 @@ Decides, per (tensor, wire), whether compression is applied:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Sequence
 
@@ -97,13 +98,17 @@ class WireReport:
 
 # Trace-time wire accounting sink.  jit caching means each compiled program
 # records its collectives once per trace; callers clear before tracing the
-# program they want to account.
+# program they want to account.  The sink is a stack: the sched executor
+# pushes a capture list around a plan execution so the per-wire reports of
+# its buckets can be folded into ONE consolidated report (see
+# ``capture_wire_reports``); everything else records into the base list.
 _WIRE_REPORTS: list = []
+_SINKS: list = [_WIRE_REPORTS]
 
 
 def record_wire_report(report: WireReport) -> None:
     """Append a trace-time accounting record (called by the collectives)."""
-    _WIRE_REPORTS.append(report)
+    _SINKS[-1].append(report)
 
 
 def clear_wire_reports() -> None:
@@ -113,3 +118,19 @@ def clear_wire_reports() -> None:
 def wire_reports() -> tuple:
     """All WireReports recorded since the last clear, in emission order."""
     return tuple(_WIRE_REPORTS)
+
+
+@contextlib.contextmanager
+def capture_wire_reports():
+    """Redirect wire-report recording into a local list for the duration.
+
+    Used by the sched executor (``sched/executor.py``) to aggregate every
+    wire a plan execution drives into one consolidated WireReport instead
+    of N per-bucket records.  Nestable; reports recorded inside do NOT
+    reach the global sink unless re-recorded by the caller."""
+    sink: list = []
+    _SINKS.append(sink)
+    try:
+        yield sink
+    finally:
+        _SINKS.pop()

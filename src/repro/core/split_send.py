@@ -16,6 +16,12 @@ into C chunks, each fully encoded then sent, chained with barriers.
 All three return bit-identical tensors; they differ only in the lowered
 schedule (benchmarks/fig15_strategies.py derives the overlap windows, and
 tests assert the HLO dependence structure).
+
+Reducing receivers (``reduce_into=``): when the consumer immediately
+accumulates the received tensor (gradient accumulation across pipeline
+stages), ``split_send`` streams the wire through the fused decode+reduce
+pass instead of the pure bit-merge decode — the P2P analogue of the
+two-shot's modified CopyReducePacks (paper §3.4).
 """
 from __future__ import annotations
 
@@ -28,6 +34,7 @@ import numpy as np
 from repro.core import codec, packing
 from repro.core.compressed_collectives import (
     _decode_chunks,
+    _decode_reduce_chunks,
     _encode_chunks,
     _pad_flat,
 )
@@ -36,15 +43,19 @@ from repro.core.policy import (CompressionPolicy, WireReport,
 
 
 def _record_p2p(name: str, axis_name, *, n_elems: int, dtype,
-                lo_planes, exp_wire: dict) -> None:
-    """Trace-time WireReport for a P2P strategy (decode output is the
-    result, so there is no decoded-float round-trip to account)."""
+                lo_planes, exp_wire: dict, fused: bool = False,
+                decoded_elems: int = 0) -> None:
+    """Trace-time WireReport for a P2P strategy.  When the receive is a
+    pure decode (``decoded_elems=0``) there is no decoded-float round-trip
+    to account; a reducing receiver (``reduce_into``) materializes the
+    decoded floats between decode and add unless it runs fused."""
     wire_bytes = int(lo_planes.size * 4) + sum(
         int(np.prod(v.shape)) * v.dtype.itemsize for v in exp_wire.values())
     record_wire_report(WireReport(
         name=name, axis=str(axis_name),
         raw_bytes=int(n_elems) * jnp.dtype(dtype).itemsize,
-        wire_bytes=wire_bytes, fused=False, decode_hbm_bytes=0,
+        wire_bytes=wire_bytes, fused=fused,
+        decode_hbm_bytes=int(8 * decoded_elems),
     ))
 
 
@@ -54,11 +65,23 @@ def _permute(a, axis_name, perm):
 
 def split_send(
     x: jax.Array, axis_name, perm, *, width: int, block: int = 512,
-    exc_frac: float = 0.02,
+    exc_frac: float = 0.02, reduce_into: jax.Array | None = None,
+    use_fused: bool = True, use_pallas: bool | None = None,
 ):
     """Split-send pipeline: lo plane transfers while exponents encode.
 
-    Returns (received tensor, overflow_flag)."""
+    Returns (received tensor, overflow_flag).
+
+    ``reduce_into`` is the FUSED RECEIVER for reducing consumers (gradient
+    accumulation across pipeline stages): instead of the pure bit-merge
+    decode, the received wire streams through the fused decode+reduce pass
+    (``_decode_reduce_chunks`` -> ``kernels/ops.decode_reduce``) straight
+    into the caller's f32 accumulator — the P2P analogue of the two-shot's
+    modified CopyReducePacks (paper §3.4), eliminating the decoded-float
+    HBM round-trip of decode-then-add.  Returns
+    (reduce_into + received, f32, shaped like x).  Bit-identical to the
+    unfused decode-then-add (``use_fused=False``) — same accumulation op,
+    same exception patch-up order."""
     lay = codec.layout_of(x.dtype)
     n = int(np.prod(x.shape))
     xf = _pad_flat(x.reshape(-1), block)
@@ -78,8 +101,27 @@ def split_send(
         "exc_raw": pk.exc_raw, "overflow": pk.overflow,
     }
     exp_recv = jax.tree.map(lambda a: _permute(a, axis_name, perm), exp_wire)
+    fused = reduce_into is not None and use_fused
     _record_p2p("split_send", axis_name, n_elems=xf.shape[0], dtype=x.dtype,
-                lo_planes=lo_planes, exp_wire=exp_wire)
+                lo_planes=lo_planes, exp_wire=exp_wire, fused=fused,
+                decoded_elems=xf.shape[0] if reduce_into is not None else 0)
+
+    if fused:
+        # Fused reducing receiver: one streaming pass over the wire into
+        # the padded f32 accumulator (exceptions patched exactly inside).
+        acc = _pad_flat(reduce_into.reshape(-1).astype(jnp.float32), block)
+        wire = {
+            "lo": lo_recv[None], "payload": exp_recv["payload"][None],
+            "bases": exp_recv["bases"][None],
+            "exc_idx": exp_recv["exc_idx"][None],
+            "exc_raw": exp_recv["exc_raw"][None],
+            "overflow": exp_recv["overflow"][None],
+        }
+        acc, flag = _decode_reduce_chunks(
+            wire, dtype=x.dtype, n=xf.shape[0], width=width, block=block,
+            acc=acc, use_pallas=use_pallas,
+        )
+        return acc[:n].reshape(x.shape), flag
 
     # Receiver: decode (the split's inverse is a pure bit-merge).
     rpk = packing.PackedPlane(
@@ -93,6 +135,10 @@ def split_send(
         lay.uint_dtype
     )
     out = codec.merge_planes(exp_out, lo_out, lay.dtype, (xf.shape[0],))
+    if reduce_into is not None:  # unfused reducing receiver (A/B baseline)
+        acc = reduce_into.reshape(-1).astype(jnp.float32)
+        acc = acc + out[:n].astype(jnp.float32)
+        return acc.reshape(x.shape), exp_recv["overflow"]
     return out[:n].reshape(x.shape), exp_recv["overflow"]
 
 
@@ -178,17 +224,42 @@ def chunked_pipeline_send(
 def p2p_send(
     x: jax.Array, axis_name, perm, *, policy: CompressionPolicy,
     tensor_class: str = "weight", strategy: str = "split_send",
+    reduce_into: jax.Array | None = None,
 ):
-    """Policy-gated P2P entry point (RL weight sync, KV-cache transfer)."""
+    """Policy-gated P2P entry point (RL weight sync, KV-cache transfer).
+
+    ``reduce_into``: reducing receiver — return ``reduce_into + received``
+    in f32 instead of the received tensor (pipeline-stage gradient
+    accumulation).  The split_send strategy fuses the add into the wire
+    decode (``policy.fused_decode_reduce``); other strategies and the raw
+    path decode-then-add (bit-identical)."""
     if not policy.should_compress(x, axis_name, tensor_class=tensor_class):
         from repro.core.compressed_collectives import raw_ppermute
-        return raw_ppermute(x, axis_name, perm), jnp.int32(0)
-    fn = {
-        "split_send": split_send,
-        "encode_send": encode_send,
-        "chunked": chunked_pipeline_send,
-    }[strategy]
-    return fn(
-        x, axis_name, perm, width=policy.width_for(tensor_class),
-        block=policy.profile.block, exc_frac=policy.profile.exc_frac,
-    )
+        got = raw_ppermute(x, axis_name, perm)
+        if reduce_into is not None:
+            got = (reduce_into.reshape(-1).astype(jnp.float32)
+                   + got.reshape(-1).astype(jnp.float32)).reshape(x.shape)
+        return got, jnp.int32(0)
+    kw = dict(width=policy.width_for(tensor_class),
+              block=policy.profile.block, exc_frac=policy.profile.exc_frac)
+    if strategy == "split_send":
+        return split_send(x, axis_name, perm, reduce_into=reduce_into,
+                          use_fused=policy.fused_decode_reduce, **kw)
+    fn = {"encode_send": encode_send, "chunked": chunked_pipeline_send}[strategy]
+    if reduce_into is None:
+        return fn(x, axis_name, perm, **kw)
+    # Reducing receiver on a pure-decode strategy: the decoded floats are
+    # materialized between decode and add, so patch the strategy's own
+    # WireReports (which assumed no reduction follows) to carry the PAID
+    # decoded-HBM round-trip — keeps accounting comparable with split_send.
+    import dataclasses
+    from repro.core.policy import capture_wire_reports
+    itemsize = jnp.dtype(x.dtype).itemsize
+    with capture_wire_reports() as caught:
+        got, flag = fn(x, axis_name, perm, **kw)
+    for r in caught:
+        record_wire_report(dataclasses.replace(
+            r, fused=False, decode_hbm_bytes=8 * (r.raw_bytes // itemsize)))
+    got = (reduce_into.reshape(-1).astype(jnp.float32)
+           + got.reshape(-1).astype(jnp.float32)).reshape(x.shape)
+    return got, flag

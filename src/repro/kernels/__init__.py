@@ -1,3 +1,72 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel package + accelerator backend probe.
+
+The kernels are OPTIONAL hot-spot implementations of the compute the paper
+itself optimizes with custom kernels (bitplane pack/unpack, plane split,
+fused decode+reduce, rANS).  ``ops.py`` is the public dispatch layer; every
+entry point takes ``use_pallas``/``interpret`` knobs.
+
+Backend probe (ROADMAP "Compiled Pallas on real TPU"): interpret-mode
+Pallas is CPU-slow, so the collectives historically defaulted to the
+pure-jnp reference everywhere.  :func:`default_use_pallas` turns the
+compiled Pallas path on automatically when a REAL TPU backend is present
+(and only there); callers pass ``use_pallas=None`` to opt into the probe.
+``REPRO_USE_PALLAS=0|1`` overrides the probe either way (escape hatch for
+benchmarking interpret mode or disabling kernels on a misbehaving
+toolchain).  The sched plan compiler records the probed backend in every
+``CommPlan`` so a compiled plan documents which dispatch it drives.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+_TRUTHY = ("1", "true", "True", "yes", "on")
+
+
+@functools.lru_cache(maxsize=None)
+def backend() -> str:
+    """The active jax backend platform name ("cpu" | "gpu" | "tpu")."""
+    try:
+        return jax.default_backend()
+    except Exception:  # pragma: no cover - backend init failure
+        return "cpu"
+
+
+def has_tpu() -> bool:
+    return backend() == "tpu"
+
+
+@functools.lru_cache(maxsize=None)
+def default_use_pallas() -> bool:
+    """True iff Pallas kernels should be used by default on this backend.
+
+    Real TPU: compiled Pallas is the hot-spot implementation — on.
+    CPU/GPU: only interpret mode exists here — off (pure-jnp reference,
+    which XLA fuses well).  ``REPRO_USE_PALLAS`` overrides the probe."""
+    env = os.environ.get("REPRO_USE_PALLAS")
+    if env is not None:
+        return env in _TRUTHY
+    return has_tpu()
+
+
+def default_interpret() -> bool:
+    """Interpret mode for Pallas calls: compiled on real TPU, interpreted
+    everywhere else (the only mode available off-TPU)."""
+    return not has_tpu()
+
+
+def resolve_use_pallas(use_pallas) -> bool:
+    """None -> probe; explicit bool wins."""
+    return default_use_pallas() if use_pallas is None else bool(use_pallas)
+
+
+def resolve_interpret(interpret) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def probe_cache_clear() -> None:
+    """Reset the cached probe results (tests flip REPRO_USE_PALLAS)."""
+    backend.cache_clear()
+    default_use_pallas.cache_clear()

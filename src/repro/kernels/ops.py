@@ -5,6 +5,12 @@ compiled on TPU); the default pure-jnp path lowers to the same algebra and
 is what the production train/serve steps trace (XLA fuses it aggressively),
 keeping the dry-run HLO clean.  The kernels are the TPU hot-spot
 implementation, validated against ref.py across shapes and dtypes.
+
+``use_pallas=None`` / ``interpret=None`` defer to the backend probe
+(``kernels.default_use_pallas`` / ``default_interpret``): a real TPU takes
+the compiled Pallas path automatically, CPU/GPU keep the jnp reference —
+the ROADMAP "Compiled Pallas on real TPU" wiring.  Explicit booleans always
+win (tests force interpret-mode Pallas on CPU).
 """
 from __future__ import annotations
 
@@ -19,29 +25,37 @@ from repro.kernels import decode_reduce as _decode_reduce
 from repro.kernels import plane_split as _plane_split
 from repro.kernels import rans as _rans
 from repro.kernels import ref as _ref
+from repro.kernels import resolve_interpret, resolve_use_pallas
 
 
-def pack(vals, width: int, *, use_pallas: bool = False, interpret: bool = True):
+def pack(vals, width: int, *, use_pallas: bool | None = None,
+         interpret: bool | None = None):
+    use_pallas, interpret = resolve_use_pallas(use_pallas), resolve_interpret(interpret)
     if use_pallas and vals.shape[0] % (32 * _bitpack.TILE_G) == 0:
         return _bitpack.pack(vals, width, interpret=interpret)
     return _ref.pack(vals, width)
 
 
-def unpack(packed, width: int, *, use_pallas: bool = False, interpret: bool = True):
+def unpack(packed, width: int, *, use_pallas: bool | None = None,
+           interpret: bool | None = None):
+    use_pallas, interpret = resolve_use_pallas(use_pallas), resolve_interpret(interpret)
     if use_pallas and packed.shape[0] % _bitpack.TILE_G == 0:
         return _bitpack.unpack(packed, width, interpret=interpret)
     return _ref.unpack(packed, width)
 
 
-def split_with_stats(x, block: int = 512, *, use_pallas: bool = False,
-                     interpret: bool = True):
+def split_with_stats(x, block: int = 512, *, use_pallas: bool | None = None,
+                     interpret: bool | None = None):
+    use_pallas, interpret = resolve_use_pallas(use_pallas), resolve_interpret(interpret)
     if use_pallas and x.shape[0] % (block * _plane_split.TILE_B) == 0:
         return _plane_split.split_with_stats(x, block, interpret=interpret)
     return _ref.split_with_stats(x, block)
 
 
 def decode_reduce(payload, lo_planes, group_bases, acc, dtype_name: str,
-                  width: int, *, use_pallas: bool = False, interpret: bool = True):
+                  width: int, *, use_pallas: bool | None = None,
+                  interpret: bool | None = None):
+    use_pallas, interpret = resolve_use_pallas(use_pallas), resolve_interpret(interpret)
     if use_pallas and payload.shape[0] % _decode_reduce.TILE_G == 0:
         return _decode_reduce.decode_reduce(
             payload, lo_planes, group_bases, acc, dtype_name, width,
@@ -50,19 +64,21 @@ def decode_reduce(payload, lo_planes, group_bases, acc, dtype_name: str,
     return _ref.decode_reduce(payload, lo_planes, group_bases, acc, dtype_name, width)
 
 
-def rans_encode(syms, table: core_ans.FreqTable, *, use_pallas: bool = False,
-                interpret: bool = True):
+def rans_encode(syms, table: core_ans.FreqTable, *, use_pallas: bool | None = None,
+                interpret: bool | None = None):
     """Dense-emission rANS over (per, lanes) uint32 symbols."""
+    use_pallas, interpret = resolve_use_pallas(use_pallas), resolve_interpret(interpret)
     freq, cum = table.freq, table.cum[:256]
     if use_pallas and syms.shape[1] % _rans.LANE_TILE == 0:
         return _rans.encode(syms, freq, cum, interpret=interpret)
     return _ref.rans_encode(syms, freq, cum)
 
 
-def rans_decode(words, state, table: core_ans.FreqTable, *, use_pallas: bool = False,
-                interpret: bool = True):
-    freq, cum = table.freq, table.cum[:256]
+def rans_decode(words, state, table: core_ans.FreqTable, *,
+                use_pallas: bool | None = None, interpret: bool | None = None):
+    use_pallas, interpret = resolve_use_pallas(use_pallas), resolve_interpret(interpret)
     s2s = core_ans._slot_to_symbol(table).astype(jnp.uint32)
+    freq, cum = table.freq, table.cum[:256]
     if use_pallas and words.shape[1] % _rans.LANE_TILE == 0:
         return _rans.decode(words, state, freq, cum, s2s, interpret=interpret)
     return _ref.rans_decode(words, state, freq, cum, s2s)

@@ -31,8 +31,10 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
+from repro.core import policy as policy_lib
 from repro.core.policy import CompressionPolicy
 from repro.launch import cells as cells_lib
+from repro.roofline.analysis import summarize_wire_reports
 from repro.launch.mesh import make_production_mesh
 from repro.models import registry, transformer
 from repro.optim import optimizers as opt_lib
@@ -164,7 +166,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
         step, donate = build_step_fn(arch, shape_name, mesh,
                                      compressed=compressed)
         args = input_specs(arch, shape_name, mesh)
+        # drain the trace-time WireReports this lowering emits: measured
+        # wire/HBM accounting for the cell, stored next to the HLO-parsed
+        # collective bytes (roofline/report.py renders both)
+        policy_lib.clear_wire_reports()
         lowered = jax.jit(step, donate_argnums=donate).lower(*args)
+        wire = summarize_wire_reports(policy_lib.wire_reports())
+        policy_lib.clear_wire_reports()
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
@@ -191,6 +199,18 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
                  ("flops", "bytes accessed", "transcendentals")
                  if isinstance(cost, dict) and k in cost},
         "cost_raw_keys": sorted(cost.keys()) if isinstance(cost, dict) else None,
+        "wire": {
+            "n": wire["n"],
+            "n_fused": wire["n_fused"],
+            "raw_bytes": wire["raw_bytes"],
+            "wire_bytes": wire["wire_bytes"],
+            "ratio": wire["ratio"],
+            "decode_hbm_paid": wire["decode_hbm_paid"],
+            "decode_hbm_eliminated": wire["decode_hbm_eliminated"],
+            "by_name": {k: {"n": v["n"], "wire_bytes": v["wire_bytes"],
+                            "ratio": v["ratio"]}
+                        for k, v in wire["by_name"].items()},
+        },
     }
     tag = f"{arch}__{shape_name}__{mesh_kind}" + (
         "" if compressed else "__raw")

@@ -197,8 +197,18 @@ def gather_tree(plan: FsdpPlan, tree, *, dp_axes, policy: CompressionPolicy):
     """Gather all FSDP-sharded leaves of ``tree``.  Returns (full_tree, flag).
 
     Differentiable: d(gather)/d(local) is the compressed reduce-scatter, so
-    ``jax.grad`` through this produces DP-reduced sharded gradients."""
+    ``jax.grad`` through this produces DP-reduced sharded gradients.
+
+    The per-leaf wire schedule (forward weight-class AG width, backward
+    gradient-class RS width, fused receive, backend) is a compiled-and-
+    cached ``sched.CommPlan`` of kind "fsdp_gather": repeated leaves with
+    the same (shape, dtype, axes, policy) signature replay one plan."""
+    from repro.core.compressed_collectives import _axis_size
+    from repro.sched import compile as sched_compile
+    from repro.sched.executor import gather_from_plan
+
     axes = tuple(dp_axes) if isinstance(dp_axes, (tuple, list)) else (dp_axes,)
+    n_dp = _axis_size(axes)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     flag = jnp.int32(0)
     out = []
@@ -206,17 +216,10 @@ def gather_tree(plan: FsdpPlan, tree, *, dp_axes, policy: CompressionPolicy):
         if not m:
             out.append(l)
             continue
-        gfn = _make_gather(
-            axes,
-            policy.width_for("weight") if policy.enabled else 8,
-            policy.width_for("gradient") if policy.enabled else 8,
-            policy.profile.block,
-            policy.profile.exc_frac,
-            policy.enabled,
-            tuple(l.shape), jnp.dtype(l.dtype).name,
-            policy.fused_decode_reduce,
-        )
-        full, f = gfn(l)
+        gplan = sched_compile.cached_fsdp_gather_plan(
+            tuple(l.shape), jnp.dtype(l.dtype).name, axes,
+            policy=policy, n_dev=n_dp)
+        full, f = gather_from_plan(gplan)(l)
         flag = jnp.maximum(flag, jax.lax.stop_gradient(f))
         out.append(full)
     return jax.tree_util.tree_unflatten(treedef, out), flag

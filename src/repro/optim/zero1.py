@@ -24,6 +24,14 @@ State is stored globally as 2-D arrays ``(dp_total, model * shard_len)``
 sharded ``P((pod, data), model)`` so the same arrays are addressable both by
 GSPMD (checkpointing, init) and by the manual region (each device sees its
 ``(1, shard_len)`` slice).
+
+The wire schedule (per-bucket compress-vs-raw gating, widths, fused
+receive) is PLAN-DRIVEN: ``zero1_step`` executes a precompiled
+``sched.CommPlan`` of kind "zero1" through ``sched.Zero1Execution``, which
+also folds the step's wire accounting into one consolidated WireReport.
+The step builder compiles the plan once per step signature
+(``sched.compile.cached_zero1_plan``); calling ``zero1_step`` without a
+plan compiles-and-caches on first sight (the planless thin wrapper).
 """
 from __future__ import annotations
 
@@ -35,10 +43,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import codec
-from repro.core.compressed_collectives import (
-    all_gather_compressed,
-    reduce_scatter_compressed,
-)
 from repro.core.policy import CompressionPolicy
 from repro.optim import optimizers as opt
 
@@ -158,82 +162,83 @@ def zero1_step(
     model_axis: str = "model",
     policy: CompressionPolicy,
     tensor_norm_axes=None,
+    plan=None,
 ):
     """One ZeRO-1 step.  ``grads`` are UNREDUCED over ``dp_axes`` (each DP
     rank's local-microbatch gradient); reduction happens in the compressed
     reduce-scatter.  Returns (new_params, new_state, overflow_flag).
+
+    The wire schedule is plan-driven (``sched/``): ``plan`` is a precompiled
+    ``CommPlan`` of kind "zero1" (the step builder compiles it once per step
+    signature); ``plan=None`` is the planless thin wrapper — the plan is
+    compiled on first sight and cached, so re-traces of the same signature
+    replay the schedule instead of re-deriving the RS/AG gating and widths.
+    Either way the executed primitives are identical to the historical
+    planless path, bit-for-bit.
     """
+    from repro import sched
+    from repro.sched import compile as sched_compile
+
     n_dp = _axis_size(dp_axes)
     idx = dp_index if dp_index is not None else _dp_index(dp_axes)  # noqa: F841
+    if plan is None:
+        plan = sched_compile.cached_zero1_plan(
+            meta, policy=policy, axis_name=dp_axes, n_dev=n_dp)
     gbuckets = flatten_buckets(meta, grads)
     flag = jnp.int32(0)
     c = state["count"] + 1
     lr = opt.lr_at(ocfg, c)
 
-    # -- reduce-scatter (compressed): grad shards ---------------------------
-    gshards = []
-    norm_sq = jnp.float32(0)
-    for name, gb, sl in zip(meta.dtype_names, gbuckets, meta.shard_lens):
-        nbytes = gb.size * gb.dtype.itemsize
-        if policy.enabled and nbytes * n_dp >= policy.min_bytes:
-            # fused receive (policy.fused_decode_reduce): remote packed
-            # chunks stream straight into the f32 grad-shard accumulator
-            gs, f = reduce_scatter_compressed(
-                gb, dp_axes, width=policy.width_for("gradient"),
-                block=policy.profile.block, exc_frac=policy.profile.exc_frac,
-                use_fused=policy.fused_decode_reduce,
-            )
+    with sched.Zero1Execution(plan, dp_axes) as ex:
+        # -- reduce-scatter (compressed): grad shards -----------------------
+        # fused receive (plan.fused <- policy.fused_decode_reduce): remote
+        # packed chunks stream straight into the f32 grad-shard accumulator
+        gshards = []
+        norm_sq = jnp.float32(0)
+        for i, (name, gb) in enumerate(zip(meta.dtype_names, gbuckets)):
+            gs, f = ex.reduce_scatter(i, gb)
             flag = jnp.maximum(flag, f)
-        else:
-            gs = _raw_reduce_scatter(gb, dp_axes, n_dp)
-        gs = gs / n_dp  # mean over DP
-        gshards.append(gs)
-        norm_sq = norm_sq + jnp.sum(jnp.square(gs))
+            gs = gs / n_dp  # mean over DP
+            gshards.append(gs)
+            norm_sq = norm_sq + jnp.sum(jnp.square(gs))
 
-    # global grad norm: shards are disjoint over dp AND model
-    axes = tuple(dp_axes) if isinstance(dp_axes, (tuple, list)) else (dp_axes,)
-    norm_axes = tensor_norm_axes or (axes + (model_axis,))
-    gnorm = jnp.sqrt(jax.lax.psum(norm_sq, norm_axes))
-    scale = jnp.minimum(1.0, ocfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+        # global grad norm: shards are disjoint over dp AND model
+        axes = tuple(dp_axes) if isinstance(dp_axes, (tuple, list)) else (dp_axes,)
+        norm_axes = tensor_norm_axes or (axes + (model_axis,))
+        gnorm = jnp.sqrt(jax.lax.psum(norm_sq, norm_axes))
+        scale = jnp.minimum(1.0, ocfg.grad_clip / jnp.maximum(gnorm, 1e-12))
 
-    # -- local shard update --------------------------------------------------
-    new_buckets, new_state_buckets = [], []
-    b1, b2 = ocfg.b1, ocfg.b2
-    bc1 = 1 - b1 ** c.astype(jnp.float32)
-    bc2 = 1 - b2 ** c.astype(jnp.float32)
-    beta_af = 1.0 - c.astype(jnp.float32) ** (-ocfg.decay_rate)
-    for name, gs, bst in zip(meta.dtype_names, gshards, state["buckets"]):
-        g = gs * scale
-        master = bst["master"]
-        if ocfg.name == "adamw":
-            m = b1 * bst["m"] + (1 - b1) * g
-            v = b2 * bst["v"] + (1 - b2) * jnp.square(g)
-            upd = (m / bc1) / (jnp.sqrt(v / bc2) + ocfg.eps)
-            nb = {"m": m, "v": v}
-        else:
-            v = beta_af * bst["v"] + (1 - beta_af) * (jnp.square(g) + 1e-30)
-            upd = g / (jnp.sqrt(v) + 1e-12)
-            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-30)
-            upd = upd / jnp.maximum(1.0, rms)
-            nb = {"v": v}
-        master = master - lr * (upd + ocfg.weight_decay * master)
-        nb["master"] = master
-        new_state_buckets.append(nb)
+        # -- local shard update ---------------------------------------------
+        new_buckets, new_state_buckets = [], []
+        b1, b2 = ocfg.b1, ocfg.b2
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+        beta_af = 1.0 - c.astype(jnp.float32) ** (-ocfg.decay_rate)
+        for i, (name, gs, bst) in enumerate(zip(meta.dtype_names, gshards,
+                                                state["buckets"])):
+            g = gs * scale
+            master = bst["master"]
+            if ocfg.name == "adamw":
+                m = b1 * bst["m"] + (1 - b1) * g
+                v = b2 * bst["v"] + (1 - b2) * jnp.square(g)
+                upd = (m / bc1) / (jnp.sqrt(v / bc2) + ocfg.eps)
+                nb = {"m": m, "v": v}
+            else:
+                v = beta_af * bst["v"] + (1 - beta_af) * (jnp.square(g) + 1e-30)
+                upd = g / (jnp.sqrt(v) + 1e-12)
+                rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-30)
+                upd = upd / jnp.maximum(1.0, rms)
+                nb = {"v": v}
+            master = master - lr * (upd + ocfg.weight_decay * master)
+            nb["master"] = master
+            new_state_buckets.append(nb)
 
-        # -- all-gather (compressed): redistribute updated params ----------
-        wire_dtype = codec.LAYOUTS[name].dtype
-        shard_out = master.astype(wire_dtype)
-        nbytes = shard_out.size * shard_out.dtype.itemsize * n_dp
-        if policy.enabled and nbytes >= policy.min_bytes:
-            gathered, f = all_gather_compressed(
-                shard_out, dp_axes,
-                width=min(policy.width_for("weight") + policy.profile.ag_extra_bits, 8),
-                block=policy.profile.block, exc_frac=policy.profile.exc_frac,
-            )
+            # -- all-gather (compressed): redistribute updated params -------
+            wire_dtype = codec.LAYOUTS[name].dtype
+            shard_out = master.astype(wire_dtype)
+            gathered, f = ex.all_gather(i, shard_out)
             flag = jnp.maximum(flag, f)
-        else:
-            gathered = _raw_all_gather(shard_out, dp_axes)
-        new_buckets.append(gathered.reshape(-1))
+            new_buckets.append(gathered.reshape(-1))
 
     new_params = unflatten_buckets(meta, new_buckets, params)
     new_state = {"count": c, "buckets": tuple(new_state_buckets)}

@@ -119,6 +119,18 @@ class Roofline:
     coll_bytes: float  # per-device collective operand bytes
     model_flops: float  # 6·N_active·D (whole step, global)
     n_chips: int
+    # measured wire accounting from the collectives' trace-time WireReports
+    # (dryrun stores summarize_wire_reports output in the cell json); 0 when
+    # the cell predates the recording or compresses nothing
+    wire_bytes: float = 0.0  # packed bytes actually on compressed wires
+    wire_raw_bytes: float = 0.0  # what those wires would move raw
+    decode_hbm_eliminated: float = 0.0  # fused-receive HBM savings
+
+    @property
+    def wire_ratio(self) -> float:
+        """Measured wire compression ratio (packed / raw); 0 = no data."""
+        return self.wire_bytes / self.wire_raw_bytes if self.wire_raw_bytes \
+            else 0.0
 
     @property
     def t_compute(self) -> float:
@@ -185,11 +197,15 @@ def analyze_cell(json_path: str, hlo_path: Optional[str] = None) -> Roofline:
     n_chips = 512 if rec["mesh"] == "multi" else 256
     flops = float(rec["cost"].get("flops", 0.0) or 0.0)
     hbm = float(rec["cost"].get("bytes accessed", 0.0) or 0.0)
+    wire = rec.get("wire") or {}
     return Roofline(
         arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
         flops=flops, hbm_bytes=hbm, coll_bytes=float(coll["total_bytes"]),
         model_flops=model_flops_for(rec["arch"], rec["shape"]),
         n_chips=n_chips,
+        wire_bytes=float(wire.get("wire_bytes", 0) or 0),
+        wire_raw_bytes=float(wire.get("raw_bytes", 0) or 0),
+        decode_hbm_eliminated=float(wire.get("decode_hbm_eliminated", 0) or 0),
     )
 
 
@@ -253,3 +269,26 @@ def markdown_row(r: Roofline) -> str:
 MD_HEADER = ("| arch | shape | mesh | compute (ms) | memory (ms) | "
              "collective (ms) | bottleneck | useful-FLOPs | roofline-frac |\n"
              "|---|---|---|---|---|---|---|---|---|")
+
+
+def markdown_row_wire(r: Roofline) -> str:
+    """Cell row with the MEASURED wire accounting (collective-emitted
+    WireReports, recorded by the dry-run) next to the HLO-parsed collective
+    bytes — the two views of the same wires must tell one story."""
+    if r.wire_raw_bytes:
+        wire = (f"{r.wire_bytes/2**20:.1f} | {r.wire_ratio:.3f} | "
+                f"{r.decode_hbm_eliminated/2**20:.1f}")
+    else:
+        wire = "- | - | -"
+    return (f"| {r.arch} | {r.shape} | {r.mesh} | "
+            f"{r.t_compute*1e3:.2f} | {r.t_memory*1e3:.2f} | "
+            f"{r.t_collective*1e3:.2f} | {r.coll_bytes/2**20:.1f} | "
+            f"{wire} | {r.bottleneck} | "
+            f"{r.useful_flops_fraction:.2f} | {r.roofline_fraction:.3f} |")
+
+
+MD_HEADER_WIRE = (
+    "| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) | "
+    "HLO coll MiB | wire MiB | wire ratio | HBM saved MiB | bottleneck | "
+    "useful-FLOPs | roofline-frac |\n"
+    "|---|---|---|---|---|---|---|---|---|---|---|---|---|")

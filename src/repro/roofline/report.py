@@ -9,7 +9,8 @@ import glob
 import json
 import os
 
-from repro.roofline.analysis import MD_HEADER, analyze_cell, markdown_row
+from repro.roofline.analysis import (MD_HEADER, MD_HEADER_WIRE, analyze_cell,
+                                     markdown_row, markdown_row_wire)
 
 
 def collect(dir_: str, mesh: str = "single", compressed_only: bool = True):
@@ -34,14 +35,20 @@ def main():
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--no-wire", action="store_true",
+                    help="legacy three-term table without the measured "
+                         "WireReport columns")
     args = ap.parse_args()
     rows = collect(args.dir, args.mesh)
     shape_order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
                    "long_500k": 3}
     rows.sort(key=lambda r: (r.arch, shape_order.get(r.shape, 9)))
-    print(MD_HEADER)
+    # default view: HLO-parsed collective bytes AND the measured wire bytes
+    # from the collectives' own WireReports, side by side (they describe
+    # the same wires — the packed operands ARE what the HLO moves)
+    print(MD_HEADER if args.no_wire else MD_HEADER_WIRE)
     for r in rows:
-        print(markdown_row(r))
+        print(markdown_row(r) if args.no_wire else markdown_row_wire(r))
     if args.json_out:
         out = [dict(arch=r.arch, shape=r.shape, mesh=r.mesh,
                     t_compute=r.t_compute, t_memory=r.t_memory,
@@ -49,7 +56,11 @@ def main():
                     useful=r.useful_flops_fraction,
                     roofline_fraction=r.roofline_fraction,
                     flops=r.flops, hbm_bytes=r.hbm_bytes,
-                    coll_bytes=r.coll_bytes, model_flops=r.model_flops)
+                    coll_bytes=r.coll_bytes, model_flops=r.model_flops,
+                    wire_bytes=r.wire_bytes,
+                    wire_raw_bytes=r.wire_raw_bytes,
+                    wire_ratio=r.wire_ratio,
+                    decode_hbm_eliminated=r.decode_hbm_eliminated)
                for r in rows]
         with open(args.json_out, "w") as f:
             json.dump(out, f, indent=1)

@@ -1,0 +1,27 @@
+"""Persistent collective runtime (paper §3.3, Uzip-NCCL on TPU/XLA terms).
+
+The schedule of every compressed collective — dtype buckets, chunk grids,
+codec widths, fused receive, backend dispatch — is compiled ONCE into a
+``CommPlan`` (plan.py), cached per step signature (cache.py), and replayed
+by a thin executor (executor.py) over the existing collective primitives.
+Planless entry points remain as thin wrappers; ``train/step.py``,
+``optim/zero1.py`` and ``optim/fsdp.py`` are plan-driven.
+"""
+from repro.sched.cache import PlanCache, cache_stats, default_cache
+from repro.sched.compile import (compile_all_gather_plan,
+                                 compile_fsdp_gather_plan, compile_psum_plan,
+                                 compile_reduce_scatter_plan,
+                                 compile_zero1_plan)
+from repro.sched.executor import (Zero1Execution, all_gather_with_plan,
+                                  execute_psum, gather_from_plan,
+                                  psum_with_plan, reduce_scatter_with_plan)
+from repro.sched.plan import BucketPlan, CommPlan, PhasePair
+
+__all__ = [
+    "BucketPlan", "CommPlan", "PhasePair", "PlanCache", "Zero1Execution",
+    "all_gather_with_plan", "cache_stats", "compile_all_gather_plan",
+    "compile_fsdp_gather_plan", "compile_psum_plan",
+    "compile_reduce_scatter_plan", "compile_zero1_plan", "default_cache",
+    "execute_psum", "gather_from_plan", "psum_with_plan",
+    "reduce_scatter_with_plan",
+]

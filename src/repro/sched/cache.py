@@ -1,0 +1,85 @@
+"""Keyed CommPlan cache: repeated step signatures hit a precompiled plan.
+
+The paper's persistent-kernel claim (§3.3) is that the schedule is decided
+once and *reused*; this cache is where the reuse happens on our side.  The
+key is everything the compiled schedule depends on — pytree signature
+(treedef + per-leaf shape/dtype), policy fingerprint, axis names, device
+count, collective kind — so any change that could alter the schedule
+misses and recompiles, and everything else is a dict lookup instead of
+re-running the bucketing/width/gating decision logic at trace time.
+
+Hit/miss counters are exposed for tests and ``benchmarks/fig_sched.py``
+(plan-cache hit rate is the benchmark's headline number).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable
+
+from repro.sched.plan import CommPlan
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+
+    @property
+    def compiles(self) -> int:
+        return self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class PlanCache:
+    """Thread-safe keyed plan store with hit/miss accounting."""
+
+    def __init__(self) -> None:
+        self._plans: dict = {}
+        self._lock = threading.Lock()
+        self.stats = CacheStats()
+
+    def get_or_compile(self, key: tuple, builder: Callable[[], CommPlan]) -> CommPlan:
+        """Return the plan for ``key``, compiling (and storing) on miss."""
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self.stats.hits += 1
+                return plan
+        # compile outside the lock: builders are pure and idempotent, so a
+        # racing double-compile is wasted work, not a correctness issue
+        plan = builder()
+        with self._lock:
+            self._plans.setdefault(key, plan)
+            self.stats.misses += 1
+        return plan
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def __contains__(self, key) -> bool:
+        return key in self._plans
+
+    def clear(self) -> None:
+        with self._lock:
+            self._plans.clear()
+            self.stats = CacheStats()
+
+
+# The process-default cache: train/step, zero1, fsdp and the planless thin
+# wrappers all share it, so a step re-trace with an unchanged signature is
+# a guaranteed hit.  Tests construct private PlanCache instances instead of
+# clearing this one.
+_DEFAULT = PlanCache()
+
+
+def default_cache() -> PlanCache:
+    return _DEFAULT
+
+
+def cache_stats() -> CacheStats:
+    return _DEFAULT.stats

@@ -1,0 +1,383 @@
+"""CommPlan compiler: pytree spec + CompressionPolicy + axis -> schedule.
+
+Everything ``tree_psum_compressed`` / ``zero1_step`` / the FSDP gathers
+decide per call — dtype bucketing, compress-vs-raw gating, widths, chunk
+grids, fused receive, backend dispatch — is decided HERE, once, from
+abstract shapes.  The executor then replays the recorded schedule against
+the existing collective primitives, so plan-driven and planless paths are
+bit-identical by construction (same primitives, same arguments, same
+order).
+
+Expected wire bytes are derived by ``jax.eval_shape`` over the real
+encoder (``_encode_chunks``): the wire format's static shape arithmetic is
+reused rather than duplicated, so plan accounting always matches what the
+collectives' WireReports record.
+
+Width selection defaults to the policy profile (bit-parity with the
+planless paths).  When live data is supplied (``sample=``), the compiler
+runs the compressibility probe instead: ``calibrate.choose_width`` per
+bucket, recording the estimated escape rate / ratio / entropy floor in
+``BucketPlan.probe`` — the paper's offline-calibration story (§3.4, Fig.
+12 stability) folded into plan compilation.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import calibrate, codec
+from repro.core import compressed_collectives as cc
+from repro.sched.plan import (PATH_COMPRESSED, PATH_RAW, PATH_RAW_PSUM,
+                              PATH_RAW_TWOSHOT, PATH_RING, PATH_TWO_SHOT,
+                              BucketPlan, CommPlan, PhasePair,
+                              policy_fingerprint, tree_signature)
+
+
+def axis_tuple(axis_name) -> tuple:
+    return tuple(axis_name) if isinstance(axis_name, (tuple, list)) else (axis_name,)
+
+
+def probe_backend() -> tuple:
+    """(backend name, use_pallas) from the kernel-package probe."""
+    from repro import kernels
+
+    return kernels.backend(), kernels.default_use_pallas()
+
+
+def _pad_up(n: int, multiple: int) -> int:
+    return -(-n // multiple) * multiple
+
+
+def encoded_wire_bytes(n_chunks: int, chunk: int, dtype, *, width: int,
+                       block: int, exc_frac: float) -> int:
+    """Static wire size of encoding (n_chunks, chunk) at the given width —
+    eval_shape over the real encoder, so this IS the wire format's size."""
+    wire = jax.eval_shape(
+        partial(cc._encode_chunks, width=width, block=block, exc_frac=exc_frac),
+        jax.ShapeDtypeStruct((n_chunks, chunk), jnp.dtype(dtype)),
+    )
+    return cc.wire_nbytes(wire)
+
+
+def _group_leaves(leaves):
+    """tree_psum_compressed's bucketing: codec-supported dtypes bucket per
+    dtype name; everything else syncs raw."""
+    groups: dict = {}
+    raw_ix = []
+    for i, l in enumerate(leaves):
+        if hasattr(l, "dtype") and jnp.dtype(l.dtype).name in codec.LAYOUTS:
+            groups.setdefault(jnp.dtype(l.dtype).name, []).append(
+                (i, tuple(l.shape), int(np.prod(l.shape))))
+        else:
+            raw_ix.append(i)
+    return groups, tuple(raw_ix)
+
+
+def _probe_bucket(sample_parts, block: int):
+    """Compressibility probe on live bucket data -> (width_choice or None)."""
+    if sample_parts is None:
+        return None
+    flat = (jnp.concatenate(sample_parts) if len(sample_parts) > 1
+            else sample_parts[0])
+    return calibrate.choose_width(flat, block=block)
+
+
+def compile_psum_plan(tree, axis_name, *, policy, tensor_class: str = "gradient",
+                      n_dev: int, sample=None, key: tuple = None) -> CommPlan:
+    """Compile the two-shot pytree all-reduce schedule.
+
+    Mirrors ``tree_psum_compressed`` + ``psum_compressed`` dispatch exactly;
+    ``tree`` may hold arrays or ShapeDtypeStructs (gating uses shapes/dtypes
+    only).  ``sample`` (optional, concrete arrays) switches width selection
+    to the calibrate probe."""
+    backend, use_pallas = probe_backend()
+    axis = axis_tuple(axis_name)
+    leaves, _ = jax.tree_util.tree_flatten(tree)
+    sample_leaves = (jax.tree_util.tree_leaves(sample)
+                    if sample is not None else None)
+    groups, raw_ix = _group_leaves(leaves)
+    buckets = []
+    for name in sorted(groups):
+        members = tuple(groups[name])
+        L = sum(m[2] for m in members)
+        dt = codec.LAYOUTS[name].dtype
+        itemsize = jnp.dtype(dt).itemsize
+        struct = jax.ShapeDtypeStruct((L,), dt)
+        base = dict(dtype_name=name, members=members, length=L, n_dev=n_dev)
+        if not policy.should_compress(struct, axis_name, tensor_class=tensor_class):
+            path = (PATH_RAW_TWOSHOT if L * itemsize >= policy.min_bytes
+                    else PATH_RAW_PSUM)
+            buckets.append(BucketPlan(path=path, raw_bytes=L * itemsize, **base))
+            continue
+        width = policy.width_for(tensor_class)
+        block = policy.profile.block
+        exc = policy.profile.exc_frac
+        probe = None
+        if sample_leaves is not None:
+            choice = _probe_bucket([sample_leaves[i].reshape(-1)
+                                    for i, _, _ in members], block)
+            width = choice.width
+            probe = (choice.est_exc_rate, choice.est_ratio, choice.entropy_bits)
+        padded = _pad_up(L, n_dev * block)
+        chunk = padded // n_dev
+        if policy.allreduce_algorithm == "ring":
+            hop = encoded_wire_bytes(1, chunk, dt, width=width, block=block,
+                                     exc_frac=exc)
+            buckets.append(BucketPlan(
+                path=PATH_RING, width=width, block=block, exc_frac=exc,
+                fused=policy.fused_decode_reduce, chunk=chunk,
+                wire_bytes=2 * (n_dev - 1) * hop,
+                raw_bytes=2 * (n_dev - 1) * chunk * itemsize,
+                probe=probe, **base))
+            continue
+        ag_width = min(width + policy.profile.ag_extra_bits, 8)
+        rs_wire = encoded_wire_bytes(n_dev, chunk, dt, width=width,
+                                     block=block, exc_frac=exc)
+        ag_wire = n_dev * encoded_wire_bytes(1, chunk, dt, width=ag_width,
+                                             block=block, exc_frac=exc)
+        buckets.append(BucketPlan(
+            path=PATH_TWO_SHOT, width=width, ag_width=ag_width, block=block,
+            exc_frac=exc, fused=policy.fused_decode_reduce, chunk=chunk,
+            wire_bytes=rs_wire + ag_wire,
+            raw_bytes=(padded + n_dev * chunk) * itemsize,
+            probe=probe, **base))
+    if key is None:
+        key = psum_plan_key(tree, axis_name, policy, tensor_class, n_dev)
+    return CommPlan(key=key, kind="psum", axis=axis, n_dev=n_dev,
+                    backend=backend, use_pallas=use_pallas,
+                    buckets=tuple(buckets), raw_leaf_ix=raw_ix,
+                    n_leaves=len(leaves))
+
+
+def psum_plan_key(tree, axis_name, policy, tensor_class: str, n_dev: int) -> tuple:
+    # probe_backend() is part of EVERY plan key: a cached plan must never
+    # replay stale kernel dispatch after the probe changes (REPRO_USE_PALLAS
+    # flip + probe_cache_clear) — same invariant as policy_fingerprint.
+    return ("psum", tree_signature(tree), axis_tuple(axis_name), int(n_dev),
+            policy_fingerprint(policy, tensor_class), probe_backend())
+
+
+def reduce_scatter_plan_key(length: int, dtype_name: str, axis_name, policy,
+                            tensor_class: str, n_dev: int) -> tuple:
+    return ("reduce_scatter", (int(length), str(dtype_name)),
+            axis_tuple(axis_name), int(n_dev),
+            policy_fingerprint(policy, tensor_class), probe_backend())
+
+
+def all_gather_plan_key(length: int, dtype_name: str, axis_name, policy,
+                        tensor_class: str, n_dev: int) -> tuple:
+    return ("all_gather", (int(length), str(dtype_name)),
+            axis_tuple(axis_name), int(n_dev),
+            policy_fingerprint(policy, tensor_class), probe_backend())
+
+
+# ---------------------------------------------------------------------------
+# flat single-phase plans (ZeRO-1's RS/AG gating rule: global bucket bytes)
+# ---------------------------------------------------------------------------
+
+def compile_reduce_scatter_plan(length: int, dtype_name: str, axis_name, *,
+                                policy, n_dev: int,
+                                tensor_class: str = "gradient",
+                                key: tuple = None) -> CommPlan:
+    """Flat reduce-scatter schedule for a local bucket of ``length`` elems.
+
+    Gate: compressed iff the policy is enabled and the GLOBAL bytes (local
+    bucket × n_dev) clear ``min_bytes`` — the ZeRO-1 rule (the paper's 1 MB
+    threshold applied to the whole wire, not the per-device slice)."""
+    backend, use_pallas = probe_backend()
+    axis = axis_tuple(axis_name)
+    dt = codec.LAYOUTS[dtype_name].dtype
+    itemsize = jnp.dtype(dt).itemsize
+    members = ((0, (length,), length),)
+    if key is None:
+        key = reduce_scatter_plan_key(length, dtype_name, axis_name, policy,
+                                      tensor_class, n_dev)
+    if not (policy.enabled and length * itemsize * n_dev >= policy.min_bytes):
+        bucket = BucketPlan(dtype_name=dtype_name, members=members,
+                            length=length, path=PATH_RAW, n_dev=n_dev,
+                            raw_bytes=length * itemsize)
+    else:
+        width = policy.width_for(tensor_class)
+        block = policy.profile.block
+        padded = _pad_up(length, n_dev * block)
+        chunk = padded // n_dev
+        bucket = BucketPlan(
+            dtype_name=dtype_name, members=members, length=length,
+            path=PATH_COMPRESSED, width=width, block=block,
+            exc_frac=policy.profile.exc_frac,
+            fused=policy.fused_decode_reduce, n_dev=n_dev, chunk=chunk,
+            wire_bytes=encoded_wire_bytes(
+                n_dev, chunk, dt, width=width, block=block,
+                exc_frac=policy.profile.exc_frac),
+            raw_bytes=padded * itemsize)
+    return CommPlan(key=key, kind="reduce_scatter", axis=axis, n_dev=n_dev,
+                    backend=backend, use_pallas=use_pallas,
+                    buckets=(bucket,), n_leaves=1)
+
+
+def compile_all_gather_plan(length: int, dtype_name: str, axis_name, *,
+                            policy, n_dev: int, tensor_class: str = "weight",
+                            key: tuple = None) -> CommPlan:
+    """Flat all-gather schedule for a local shard of ``length`` elements
+    (ZeRO-1's AG phase: weight-class width + ag_extra_bits headroom)."""
+    backend, use_pallas = probe_backend()
+    axis = axis_tuple(axis_name)
+    dt = codec.LAYOUTS[dtype_name].dtype
+    itemsize = jnp.dtype(dt).itemsize
+    members = ((0, (length,), length),)
+    if key is None:
+        key = all_gather_plan_key(length, dtype_name, axis_name, policy,
+                                  tensor_class, n_dev)
+    if not (policy.enabled and length * itemsize * n_dev >= policy.min_bytes):
+        bucket = BucketPlan(dtype_name=dtype_name, members=members,
+                            length=length, path=PATH_RAW, n_dev=n_dev,
+                            fused=False, raw_bytes=n_dev * length * itemsize)
+    else:
+        width = min(policy.width_for(tensor_class)
+                    + policy.profile.ag_extra_bits, 8)
+        block = policy.profile.block
+        padded = _pad_up(length, block)
+        bucket = BucketPlan(
+            dtype_name=dtype_name, members=members, length=length,
+            path=PATH_COMPRESSED, width=width, block=block,
+            exc_frac=policy.profile.exc_frac, fused=False, n_dev=n_dev,
+            chunk=padded,
+            wire_bytes=n_dev * encoded_wire_bytes(
+                1, padded, dt, width=width, block=block,
+                exc_frac=policy.profile.exc_frac),
+            raw_bytes=n_dev * padded * itemsize)
+    return CommPlan(key=key, kind="all_gather", axis=axis, n_dev=n_dev,
+                    backend=backend, use_pallas=use_pallas,
+                    buckets=(bucket,), n_leaves=1)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: per-dtype RS/AG phase pairs around the optimizer update
+# ---------------------------------------------------------------------------
+
+def compile_zero1_plan(meta, *, policy, axis_name, n_dev: int,
+                       key: tuple = None) -> CommPlan:
+    """Compile the ZeRO-1 sync schedule from a ``BucketMeta``.
+
+    One PhasePair per dtype bucket: the RS phase carries gradient-class
+    packed planes, the AG phase weight-class planes (paper Table 1's
+    distinct calibrated widths).  Gating matches ``zero1_step``'s planless
+    rules bit-for-bit."""
+    backend, use_pallas = probe_backend()
+    axis = axis_tuple(axis_name)
+    if key is None:
+        key = zero1_plan_key(meta, axis_name, policy, n_dev)
+    pairs = []
+    for name, members, Lp, sl in zip(meta.dtype_names, meta.members,
+                                     meta.padded, meta.shard_lens):
+        rs = compile_reduce_scatter_plan(
+            Lp, name, axis_name, policy=policy, n_dev=n_dev,
+            tensor_class="gradient", key=key + ("rs", name)).buckets[0]
+        rs = _with_members(rs, members)
+        ag = compile_all_gather_plan(
+            sl, name, axis_name, policy=policy, n_dev=n_dev,
+            tensor_class="weight", key=key + ("ag", name)).buckets[0]
+        pairs.append(PhasePair(rs=rs, ag=ag))
+    return CommPlan(key=key, kind="zero1", axis=axis, n_dev=n_dev,
+                    backend=backend, use_pallas=use_pallas,
+                    buckets=tuple(pairs), n_leaves=sum(
+                        len(m) for m in meta.members))
+
+
+def zero1_plan_key(meta, axis_name, policy, n_dev: int) -> tuple:
+    return ("zero1", meta.dtype_names, meta.padded, meta.shard_lens,
+            meta.block, axis_tuple(axis_name), int(n_dev),
+            policy_fingerprint(policy), probe_backend())
+
+
+def _with_members(bucket: BucketPlan, members) -> BucketPlan:
+    import dataclasses
+
+    return dataclasses.replace(bucket, members=tuple(members))
+
+
+# ---------------------------------------------------------------------------
+# FSDP gather: custom-vjp weight AG (forward) + gradient RS (backward)
+# ---------------------------------------------------------------------------
+
+def compile_fsdp_gather_plan(local_shape: tuple, dtype_name: str, axis_name,
+                             *, policy, n_dev: int,
+                             key: tuple = None) -> CommPlan:
+    """Schedule for one FSDP leaf gather.  ``width`` is the backward
+    (gradient-class reduce-scatter) width, ``ag_width`` the forward
+    (weight-class all-gather) width — ``optim/fsdp._make_gather``'s
+    (w_bwd, w_fwd) in plan-IR terms.  Sharded-vs-replicated is the train
+    step's plan (``plan_fsdp_tree``); this plan only schedules the wire."""
+    backend, use_pallas = probe_backend()
+    axis = axis_tuple(axis_name)
+    length = int(np.prod(local_shape))
+    dt = jnp.dtype(dtype_name)
+    itemsize = dt.itemsize
+    block = policy.profile.block
+    if key is None:
+        key = fsdp_gather_plan_key(local_shape, dtype_name, axis_name,
+                                   policy, n_dev)
+    members = ((0, tuple(local_shape), length),)
+    if not policy.enabled:
+        bucket = BucketPlan(dtype_name=dtype_name, members=members,
+                            length=length, path=PATH_RAW, width=8, ag_width=8,
+                            fused=False, n_dev=n_dev,
+                            raw_bytes=(n_dev + 1) * length * itemsize)
+    else:
+        w_bwd = policy.width_for("gradient")
+        w_fwd = policy.width_for("weight")
+        ag_len = _pad_up(length, block)
+        rs_chunk = _pad_up(length, block)  # per-destination row, block-padded
+        bucket = BucketPlan(
+            dtype_name=dtype_name, members=members, length=length,
+            path=PATH_COMPRESSED, width=w_bwd, ag_width=w_fwd, block=block,
+            exc_frac=policy.profile.exc_frac,
+            fused=policy.fused_decode_reduce, n_dev=n_dev, chunk=rs_chunk,
+            wire_bytes=(n_dev * encoded_wire_bytes(
+                1, ag_len, dt, width=w_fwd, block=block,
+                exc_frac=policy.profile.exc_frac)
+                + encoded_wire_bytes(
+                    n_dev, rs_chunk, dt, width=w_bwd, block=block,
+                    exc_frac=policy.profile.exc_frac)),
+            raw_bytes=(n_dev * ag_len + n_dev * rs_chunk) * itemsize)
+    return CommPlan(key=key, kind="fsdp_gather", axis=axis, n_dev=n_dev,
+                    backend=backend, use_pallas=use_pallas,
+                    buckets=(bucket,), n_leaves=1)
+
+
+def fsdp_gather_plan_key(local_shape, dtype_name, axis_name, policy,
+                         n_dev: int) -> tuple:
+    return ("fsdp_gather", tuple(local_shape), str(dtype_name),
+            axis_tuple(axis_name), int(n_dev), policy_fingerprint(policy),
+            probe_backend())
+
+
+# ---------------------------------------------------------------------------
+# cached compile helpers (the step builders' entry points)
+# ---------------------------------------------------------------------------
+
+def cached_zero1_plan(meta, *, policy, axis_name, n_dev: int, cache=None):
+    from repro.sched.cache import default_cache
+
+    cache = default_cache() if cache is None else cache
+    key = zero1_plan_key(meta, axis_name, policy, n_dev)
+    return cache.get_or_compile(
+        key, lambda: compile_zero1_plan(meta, policy=policy,
+                                        axis_name=axis_name, n_dev=n_dev,
+                                        key=key))
+
+
+def cached_fsdp_gather_plan(local_shape, dtype_name, axis_name, *, policy,
+                            n_dev: int, cache=None):
+    from repro.sched.cache import default_cache
+
+    cache = default_cache() if cache is None else cache
+    key = fsdp_gather_plan_key(local_shape, dtype_name, axis_name, policy,
+                               n_dev)
+    return cache.get_or_compile(
+        key, lambda: compile_fsdp_gather_plan(
+            tuple(local_shape), dtype_name, axis_name, policy=policy,
+            n_dev=n_dev, key=key))

@@ -1,0 +1,275 @@
+"""Persistent plan executor: drive the compressed collectives from a CommPlan.
+
+The executor is deliberately thin: every wire still goes through the
+``compressed_collectives`` / ``kernels.ops`` primitives (so plan-driven
+and planless execution are bit-identical — same ops, same arguments, same
+device-index accumulation order).  What changes is WHERE decisions happen:
+the planless paths re-derive bucketing/gating/widths inside every trace,
+the executor replays a schedule compiled once and cached per signature
+(``sched/cache.py``).
+
+Wire accounting: a plan execution emits ONE consolidated ``WireReport``
+(name ``plan:<kind>``) instead of N per-bucket records — the per-wire
+reports of the buckets are captured (``policy.capture_wire_reports``) and
+folded, preserving raw/wire totals and the fused/unfused decoded-HBM
+split, so ``summarize_wire_reports`` sees the same totals either way.
+
+Entry points:
+  * ``psum_with_plan``            — pytree two-shot all-reduce (the plan
+    twin of ``tree_psum_compressed``)
+  * ``reduce_scatter_with_plan``  — flat local bucket -> reduced shard
+  * ``all_gather_with_plan``      — flat local shard -> stacked full
+  * ``execute_zero1_pairs``       — ZeRO-1 phase driver (optim/zero1.py)
+  * ``gather_from_plan``          — FSDP custom-vjp gather (optim/fsdp.py)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compressed_collectives import (
+    _axis_size,
+    all_gather_compressed,
+    psum_compressed_ring,
+    psum_raw_twoshot,
+    psum_safe,
+    reduce_scatter_compressed,
+)
+from repro.core.policy import (WireReport, capture_wire_reports,
+                               record_wire_report)
+from repro.sched import compile as sched_compile
+from repro.sched.cache import PlanCache, default_cache
+from repro.sched.plan import (PATH_COMPRESSED, PATH_RAW_PSUM,
+                              PATH_RAW_TWOSHOT, PATH_RING, PATH_TWO_SHOT,
+                              BucketPlan, CommPlan)
+
+
+def consolidate_reports(plan: CommPlan, caught) -> WireReport | None:
+    """Fold the per-wire reports of one plan execution into one record.
+
+    ``fused`` is uniform across a plan's reduce-side wires (it comes from
+    one policy knob), so a single flag classifies the whole decoded-HBM
+    sum the same way ``summarize_wire_reports`` would classify the
+    individual records."""
+    if not caught:
+        return None
+    fused = any(r.fused and r.decode_hbm_bytes for r in caught)
+    return WireReport(
+        name=f"plan:{plan.kind}",
+        axis=str(plan.axis if len(plan.axis) > 1 else plan.axis[0]),
+        raw_bytes=sum(r.raw_bytes for r in caught),
+        wire_bytes=sum(r.wire_bytes for r in caught),
+        fused=fused,
+        decode_hbm_bytes=sum(r.decode_hbm_bytes for r in caught),
+    )
+
+
+def _emit(plan: CommPlan, caught) -> None:
+    rep = consolidate_reports(plan, caught)
+    if rep is not None:
+        record_wire_report(rep)
+
+
+# ---------------------------------------------------------------------------
+# bucket-level drivers (shared by every entry point)
+# ---------------------------------------------------------------------------
+
+def _exec_reduce_scatter(b: BucketPlan, x, axis_name, use_pallas):
+    """One RS bucket: compressed (plan widths) or the byte-exact raw RS.
+    Returns (f32 shard, flag) either way — zero1's contract."""
+    if b.path == PATH_COMPRESSED:
+        return reduce_scatter_compressed(
+            x, axis_name, width=b.width, block=b.block, exc_frac=b.exc_frac,
+            use_fused=b.fused, use_pallas=use_pallas)
+    from repro.optim.zero1 import _raw_reduce_scatter
+
+    return _raw_reduce_scatter(x, axis_name, b.n_dev), jnp.int32(0)
+
+
+def _exec_all_gather(b: BucketPlan, y, axis_name):
+    """One AG bucket.  Returns (stacked (n_dev, chunk) or raw-gathered,
+    flag); the caller reshapes per its own layout (matching the planless
+    call sites exactly)."""
+    if b.path == PATH_COMPRESSED:
+        return all_gather_compressed(
+            y, axis_name, width=b.width, block=b.block, exc_frac=b.exc_frac)
+    from repro.optim.zero1 import _raw_all_gather
+
+    return _raw_all_gather(y, axis_name), jnp.int32(0)
+
+
+def _exec_psum_bucket(b: BucketPlan, bucket, axis_name, use_pallas):
+    """One psum bucket: the exact dispatch of ``psum_compressed``."""
+    dt = bucket.dtype
+    if b.path == PATH_RAW_PSUM:
+        return psum_safe(bucket, axis_name).astype(dt), jnp.int32(0)
+    if b.path == PATH_RAW_TWOSHOT:
+        return psum_raw_twoshot(bucket, axis_name).astype(dt), jnp.int32(0)
+    if b.path == PATH_RING:
+        return psum_compressed_ring(
+            bucket, axis_name, width=b.width, block=b.block,
+            exc_frac=b.exc_frac, out_dtype=dt, use_fused=b.fused)
+    assert b.path == PATH_TWO_SHOT, b.path
+    red, f1 = reduce_scatter_compressed(
+        bucket, axis_name, width=b.width, block=b.block, exc_frac=b.exc_frac,
+        use_fused=b.fused, use_pallas=use_pallas)
+    gath, f2 = all_gather_compressed(
+        red.astype(dt), axis_name, width=b.ag_width, block=b.block,
+        exc_frac=b.exc_frac)
+    out = gath.reshape(-1)[: b.length].astype(dt)
+    return out, jnp.maximum(f1, f2)
+
+
+# ---------------------------------------------------------------------------
+# pytree all-reduce
+# ---------------------------------------------------------------------------
+
+def execute_psum(plan: CommPlan, tree, axis_name):
+    """Run a compiled psum plan over a concrete pytree.
+
+    Bit-identical to ``tree_psum_compressed(tree, axis_name, policy=...)``
+    for the policy the plan was compiled from.  Returns (tree, flag)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    assert len(leaves) == plan.n_leaves, (len(leaves), plan.n_leaves)
+    out = list(leaves)
+    flag = jnp.int32(0)
+    with capture_wire_reports() as caught:
+        for b in plan.buckets:
+            parts = [leaves[i].reshape(-1) for i, _, _ in b.members]
+            bucket = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+            red, f = _exec_psum_bucket(b, bucket, axis_name, plan.use_pallas)
+            flag = jnp.maximum(flag, f)
+            offs = np.cumsum([0] + [m[2] for m in b.members])
+            for k, (i, shape, _) in enumerate(b.members):
+                out[i] = red[offs[k]: offs[k + 1]].reshape(shape)
+        for i in plan.raw_leaf_ix:
+            out[i] = psum_safe(leaves[i], axis_name)
+    _emit(plan, caught)
+    return jax.tree_util.tree_unflatten(treedef, out), flag
+
+
+def psum_with_plan(tree, axis_name, *, policy=None, tensor_class: str = "gradient",
+                   plan: CommPlan = None, cache: PlanCache = None):
+    """Plan-driven pytree all-reduce.
+
+    With ``plan=None`` this is the cached thin wrapper: the plan is looked
+    up by (pytree signature, axis, n_dev, policy fingerprint) and compiled
+    on first sight — a repeated step signature re-traces straight off the
+    cached schedule.  Returns (tree, overflow_flag)."""
+    if plan is None:
+        assert policy is not None, "psum_with_plan needs policy= or plan="
+        n_dev = _axis_size(axis_name)
+        cache = default_cache() if cache is None else cache
+        key = sched_compile.psum_plan_key(tree, axis_name, policy,
+                                          tensor_class, n_dev)
+        plan = cache.get_or_compile(
+            key, lambda: sched_compile.compile_psum_plan(
+                tree, axis_name, policy=policy, tensor_class=tensor_class,
+                n_dev=n_dev, key=key))
+    return execute_psum(plan, tree, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# flat phases
+# ---------------------------------------------------------------------------
+
+def reduce_scatter_with_plan(x, axis_name, *, policy=None,
+                             tensor_class: str = "gradient",
+                             plan: CommPlan = None, cache: PlanCache = None):
+    """Plan-driven flat reduce-scatter (ZeRO-1 gating rules).
+
+    Returns (f32 local shard, flag) — bit-identical to the planless
+    ``reduce_scatter_compressed`` (compressed path, fused or unfused) or
+    ``zero1._raw_reduce_scatter`` (gated off)."""
+    if plan is None:
+        assert policy is not None
+        n_dev = _axis_size(axis_name)
+        cache = default_cache() if cache is None else cache
+        name = jnp.dtype(x.dtype).name
+        key = sched_compile.reduce_scatter_plan_key(
+            int(np.prod(x.shape)), name, axis_name, policy, tensor_class,
+            n_dev)
+        plan = cache.get_or_compile(
+            key, lambda: sched_compile.compile_reduce_scatter_plan(
+                int(np.prod(x.shape)), name, axis_name, policy=policy,
+                n_dev=n_dev, tensor_class=tensor_class, key=key))
+    with capture_wire_reports() as caught:
+        out, flag = _exec_reduce_scatter(plan.buckets[0], x, axis_name,
+                                         plan.use_pallas)
+    _emit(plan, caught)
+    return out, flag
+
+
+def all_gather_with_plan(y, axis_name, *, policy=None,
+                         tensor_class: str = "weight",
+                         plan: CommPlan = None, cache: PlanCache = None):
+    """Plan-driven flat all-gather.  Returns (gathered, flag)."""
+    if plan is None:
+        assert policy is not None
+        n_dev = _axis_size(axis_name)
+        cache = default_cache() if cache is None else cache
+        name = jnp.dtype(y.dtype).name
+        key = sched_compile.all_gather_plan_key(
+            int(np.prod(y.shape)), name, axis_name, policy, tensor_class,
+            n_dev)
+        plan = cache.get_or_compile(
+            key, lambda: sched_compile.compile_all_gather_plan(
+                int(np.prod(y.shape)), name, axis_name, policy=policy,
+                n_dev=n_dev, tensor_class=tensor_class, key=key))
+    with capture_wire_reports() as caught:
+        out, flag = _exec_all_gather(plan.buckets[0], y, axis_name)
+    _emit(plan, caught)
+    return out, flag
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 phase driver
+# ---------------------------------------------------------------------------
+
+class Zero1Execution:
+    """Context for one plan-driven ZeRO-1 sync: the optimizer update runs
+    BETWEEN the RS and AG phases, so the executor exposes the two phases
+    separately and consolidates the wire accounting when closed."""
+
+    def __init__(self, plan: CommPlan, axis_name):
+        self.plan = plan
+        self.axis_name = axis_name
+        self._cap = capture_wire_reports()
+        self._caught = None
+
+    def __enter__(self):
+        self._caught = self._cap.__enter__()
+        return self
+
+    def __exit__(self, *exc):
+        self._cap.__exit__(*exc)
+        if exc[0] is None:
+            _emit(self.plan, self._caught)
+        return False
+
+    def reduce_scatter(self, i: int, gbucket):
+        return _exec_reduce_scatter(self.plan.buckets[i].rs, gbucket,
+                                    self.axis_name, self.plan.use_pallas)
+
+    def all_gather(self, i: int, shard):
+        return _exec_all_gather(self.plan.buckets[i].ag, shard,
+                                self.axis_name)
+
+
+# ---------------------------------------------------------------------------
+# FSDP gather
+# ---------------------------------------------------------------------------
+
+def gather_from_plan(plan: CommPlan):
+    """Custom-vjp FSDP gather driven by a compiled plan (forward weight AG
+    at ``ag_width``, backward gradient RS at ``width``, fused receive per
+    plan).  Returns the gather fn — the heavy lifting stays in
+    ``optim/fsdp._make_gather`` (lru-cached on exactly the plan fields)."""
+    from repro.optim import fsdp as fsdp_lib
+
+    b = plan.buckets[0]
+    local_shape = b.members[0][1]
+    return fsdp_lib._make_gather(
+        plan.axis, b.ag_width, b.width, b.block, b.exc_frac,
+        b.path == PATH_COMPRESSED, local_shape, b.dtype_name, b.fused)

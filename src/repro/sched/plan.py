@@ -1,0 +1,183 @@
+"""Communication-plan IR (paper §3.3, the Uzip-NCCL persistent kernel model).
+
+Uzip-NCCL integrates compression into NCCL's persistent kernels: the
+schedule — bucketing, chunking, channel assignment, codec choice — is
+decided ONCE and reused across iterations, eliminating redundant launch
+and decision work.  The TPU/XLA analogue of that schedule is a
+``CommPlan``: a static, hashable description of everything the compressed
+collectives would otherwise re-derive at every trace — dtype buckets,
+chunk grids, codec widths, fused-vs-unfused receive path, backend
+dispatch, and the expected wire bytes.
+
+A plan is pure data (no arrays, no tracers): it is built by
+``sched/compile.py`` from abstract shapes + a ``CompressionPolicy``,
+cached by ``sched/cache.py`` keyed on the step signature, and driven by
+``sched/executor.py`` against the existing ``compressed_collectives`` /
+``kernels.ops`` primitives.  Later features (compiled-Pallas TPU dispatch,
+P2P plans, serve KV plans) plug into this IR rather than growing their own
+decision logic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# -- bucket execution paths ---------------------------------------------------
+# psum-kind buckets (mirror of ``psum_compressed``'s dispatch):
+PATH_TWO_SHOT = "two_shot"        # compressed RS + compressed AG
+PATH_RING = "ring"                # paper's negative baseline, per-hop codec
+PATH_RAW_TWOSHOT = "raw_twoshot"  # big but gated off: byte-exact raw two-shot
+PATH_RAW_PSUM = "raw_psum"        # small: plain (f32-promoted) psum
+# single-phase buckets (reduce_scatter / all_gather kinds):
+PATH_COMPRESSED = "compressed"
+PATH_RAW = "raw"
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Static schedule for ONE flat bucket (one wire, or one two-shot pair).
+
+    ``members`` lists the pytree leaves fused into the bucket as
+    ``(flat_leaf_index, shape, size)`` in tree order — the executor
+    concatenates/scatters by these offsets.  ``chunk`` is the per-device
+    chunk length of the reduce-scatter grid (``padded / n_dev``); the
+    all-gather phase reuses it.  ``wire_bytes``/``raw_bytes`` are the
+    expected per-execution wire accounting (static — wire shapes do not
+    depend on data), matching what the collectives' WireReports record.
+    """
+
+    dtype_name: str
+    members: tuple  # ((leaf_index, shape, size), ...)
+    length: int  # unpadded element count of the concatenated bucket
+    path: str  # one of the PATH_* constants
+    width: int = 0  # exponent width of the RS / send phase
+    ag_width: int = 0  # exponent width of the AG phase (two-shot only)
+    block: int = 512
+    exc_frac: float = 0.02
+    fused: bool = True  # fused decode+reduce receive
+    n_dev: int = 1
+    chunk: int = 0  # per-device chunk length after padding
+    wire_bytes: int = 0  # expected compressed wire bytes per execution
+    raw_bytes: int = 0  # uncompressed bytes the same wires would move
+    # compressibility probe (filled when the compiler calibrated from live
+    # data): (est_exc_rate, est_ratio, entropy_bits), else None
+    probe: tuple | None = None
+
+    @property
+    def ratio(self) -> float:
+        return self.wire_bytes / max(self.raw_bytes, 1)
+
+    @property
+    def compressed(self) -> bool:
+        return self.path in (PATH_TWO_SHOT, PATH_RING, PATH_COMPRESSED)
+
+
+@dataclasses.dataclass(frozen=True)
+class PhasePair:
+    """ZeRO-1 bucket schedule: the RS (gradient-class) and AG (weight-class)
+    phases of one dtype bucket carry different widths and are gated on
+    different byte counts, so each gets its own BucketPlan."""
+
+    rs: BucketPlan
+    ag: BucketPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPlan:
+    """A compiled communication plan for one collective signature.
+
+    ``kind``: "psum" (pytree two-shot all-reduce), "reduce_scatter",
+    "all_gather" (flat single-bucket phases), "zero1" (per-dtype RS/AG
+    PhasePairs with the optimizer update between), or "fsdp_gather"
+    (custom-vjp weight gather / gradient RS of one leaf).
+
+    ``backend``/``use_pallas`` record the probed kernel dispatch at compile
+    time (``repro.kernels.backend()``): a plan documents exactly which
+    receive-path implementation it drives.  ``raw_leaf_ix`` are pytree
+    leaves outside every bucket (unsupported dtypes) synced with a plain
+    safe psum."""
+
+    key: tuple  # the cache key this plan was compiled under (hashable)
+    kind: str
+    axis: tuple  # manual mesh axis name(s)
+    n_dev: int
+    backend: str
+    use_pallas: bool
+    buckets: tuple  # BucketPlans (or PhasePairs for kind="zero1")
+    raw_leaf_ix: tuple = ()
+    n_leaves: int = 0
+
+    def _flat_buckets(self):
+        for b in self.buckets:
+            if isinstance(b, PhasePair):
+                yield b.rs
+                yield b.ag
+            else:
+                yield b
+
+    @property
+    def wire_bytes(self) -> int:
+        """Expected compressed wire bytes of one plan execution."""
+        return sum(b.wire_bytes for b in self._flat_buckets() if b.compressed)
+
+    @property
+    def raw_bytes(self) -> int:
+        return sum(b.raw_bytes for b in self._flat_buckets() if b.compressed)
+
+    @property
+    def ratio(self) -> float:
+        return self.wire_bytes / max(self.raw_bytes, 1)
+
+    def summary(self) -> dict:
+        """Human/benchmark-facing description of the compiled schedule."""
+        return {
+            "kind": self.kind,
+            "axis": self.axis,
+            "n_dev": self.n_dev,
+            "backend": self.backend,
+            "use_pallas": self.use_pallas,
+            "n_buckets": len(self.buckets),
+            "n_raw_leaves": len(self.raw_leaf_ix),
+            "paths": tuple(b.path for b in self._flat_buckets()),
+            "wire_bytes": self.wire_bytes,
+            "raw_bytes": self.raw_bytes,
+            "ratio": self.ratio,
+        }
+
+
+def policy_fingerprint(policy, tensor_class: str = "gradient") -> tuple:
+    """Hashable fingerprint of every policy field a plan depends on.
+
+    Part of the cache key: any knob change (widths, thresholds, algorithm,
+    fused receive) must MISS and recompile — a stale plan would silently
+    execute the old schedule."""
+    prof = policy.profile
+    return (
+        bool(policy.enabled),
+        int(policy.min_bytes),
+        tuple(policy.compress_axes),
+        tuple(policy.raw_axes),
+        str(policy.allreduce_algorithm),
+        bool(policy.fused_decode_reduce),
+        tuple(sorted(prof.widths.items())),
+        int(prof.block),
+        float(prof.exc_frac),
+        int(prof.ag_extra_bits),
+        str(tensor_class),
+    )
+
+
+def tree_signature(tree) -> tuple:
+    """Hashable structural signature of a pytree: treedef + per-leaf
+    (shape, dtype).  Works on arrays and ShapeDtypeStructs alike."""
+    leaves, treedef = _tree_flatten(tree)
+    sig = tuple(
+        (tuple(getattr(l, "shape", ())), str(getattr(l, "dtype", type(l).__name__)))
+        for l in leaves
+    )
+    return (treedef, sig)
+
+
+def _tree_flatten(tree):
+    import jax
+
+    return jax.tree_util.tree_flatten(tree)

@@ -48,6 +48,8 @@ from repro.models.config import ArchConfig
 from repro.optim import fsdp as fsdp_lib
 from repro.optim import optimizers as opt
 from repro.optim import zero1 as zero1_lib
+from repro.sched import compile as sched_compile
+from repro.sched import executor as sched_executor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -472,6 +474,11 @@ def _build_zero1_step(cfg: ArchConfig, tcfg: TrainConfig, mesh):
     n_dp = int(np.prod([mesh.shape[a] for a in dp]))
     meta = zero1_meta(cfg, n_dp, tcfg, mesh)
     pspecs = train_param_specs(cfg, tcfg, mesh)
+    # persistent wire schedule: compiled ONCE per step signature (bucket
+    # meta + policy + sync axes) and replayed by every trace/step — the
+    # sched-cache hit is what makes re-tracing cheap (paper §3.3).
+    comm_plan = sched_compile.cached_zero1_plan(
+        meta, policy=tcfg.policy, axis_name=tuple(dp), n_dev=n_dp)
 
     def loss_fn(params, mb):
         h = transformer.forward(params, mb, cfg, remat=tcfg.remat)
@@ -487,6 +494,7 @@ def _build_zero1_step(cfg: ArchConfig, tcfg: TrainConfig, mesh):
                 tcfg.optim, meta, params, grads, st,
                 dp_axes=tuple(dp), policy=tcfg.policy,
                 tensor_norm_axes=tuple(dp) if tcfg.dp_only else None,
+                plan=comm_plan,
             )
             return new_p, zero1_lib.local_to_global(new_st), flag, gnorm
 
@@ -610,16 +618,13 @@ def _build_fsdp_step(cfg: ArchConfig, tcfg: TrainConfig, mesh):
                     continue
                 names = (e,) if isinstance(e, str) else tuple(e)
                 lshape[dim_i] //= int(np.prod([mesh.shape[a] for a in names]))
-            gfn = fsdp_lib._make_gather(
-                tuple(dp),
-                tcfg.policy.width_for("weight") if tcfg.policy.enabled else 8,
-                tcfg.policy.width_for("gradient") if tcfg.policy.enabled else 8,
-                tcfg.policy.profile.block,
-                tcfg.policy.profile.exc_frac,
-                tcfg.policy.enabled,
-                tuple(lshape), jnp.dtype(moved.dtype).name,
-                tcfg.policy.fused_decode_reduce,
-            )
+            # plan-driven gather: the wire schedule for this leaf signature
+            # is compiled once and cached (sched); repeated layers/steps
+            # replay it instead of re-deriving widths and gating
+            gplan = sched_compile.cached_fsdp_gather_plan(
+                tuple(lshape), jnp.dtype(moved.dtype).name, tuple(dp),
+                policy=tcfg.policy, n_dev=n_dp)
+            gfn = sched_executor.gather_from_plan(gplan)
 
             def body(lm, _gfn=gfn):
                 full, _flag = _gfn(lm)

@@ -198,6 +198,82 @@ def _tree():
     res["tree_psum_f32_exact"] = ok_b
 
 
+# -- 4b. sched executor: psum_with_plan == tree_psum_compressed on 8 devs ------
+@section("sched", ["sched_psum_exact", "sched_cache_hit",
+                   "sched_rs_exact"])
+def _sched():
+    from repro import sched
+    from repro.core.compressed_collectives import reduce_scatter_compressed
+
+    tree = {"w": jnp.asarray(rng.normal(0, 0.02, (256, 64)), jnp.bfloat16),
+            "b": jnp.asarray(rng.normal(0, 1, (4096,)), jnp.float32),
+            "n": jnp.asarray(rng.integers(0, 5, (3,)), jnp.int32)}
+    cache = sched.PlanCache()
+
+    def planned(tr):
+        return sched.psum_with_plan(tr, "data", policy=policy, cache=cache)
+
+    def planless(tr):
+        return tree_psum_compressed(tr, "data", policy=policy)
+
+    sm = lambda f: jax.jit(jax.shard_map(
+        f, mesh=mesh1, in_specs=(P(),), out_specs=(P(), P()),
+        axis_names={"data"}, check_vma=False))
+    a, fa = sm(planned)(tree)
+    b, fb = sm(planless)(tree)
+    ok = all(bits_equal(x, y) if x.dtype != jnp.int32 else
+             bool(jnp.all(x == y))
+             for x, y in zip(jax.tree_util.tree_leaves(a),
+                             jax.tree_util.tree_leaves(b)))
+    res["sched_psum_exact"] = ok and int(fa) == int(fb) == 0
+    sm(planned)(tree)  # same signature: second trace must hit the cache
+    res["sched_cache_hit"] = (cache.stats.hits >= 1
+                              and cache.stats.misses == 1)
+
+    x = jnp.asarray(rng.normal(0, 0.02, (1 << 15,)), jnp.bfloat16)
+    a2, f2 = jax.jit(jax.shard_map(
+        lambda v: sched.reduce_scatter_with_plan(
+            v, "data", policy=policy, cache=sched.PlanCache()),
+        mesh=mesh1, in_specs=(P(),), out_specs=(P(), P()),
+        axis_names={"data"}, check_vma=False))(x)
+    b2, g2 = jax.jit(jax.shard_map(
+        lambda v: reduce_scatter_compressed(
+            v, "data", width=policy.width_for("gradient"),
+            block=policy.profile.block, exc_frac=policy.profile.exc_frac,
+            use_fused=policy.fused_decode_reduce),
+        mesh=mesh1, in_specs=(P(),), out_specs=(P(), P()),
+        axis_names={"data"}, check_vma=False))(x)
+    res["sched_rs_exact"] = (bool(jnp.all(
+        jax.lax.bitcast_convert_type(a2, jnp.uint32)
+        == jax.lax.bitcast_convert_type(b2, jnp.uint32)))
+        and int(f2) == int(g2))
+
+
+# -- 4c. split_send fused reducing receiver across 8 devices -------------------
+@section("p2p_reduce", ["p2p_reduce_into_exact"])
+def _p2p_reduce():
+    t = jnp.asarray(rng.normal(0, 0.02, (1 << 14,)), jnp.bfloat16)
+    acc0 = jnp.asarray(rng.normal(0, 1, (1 << 14,)), jnp.float32)
+
+    def f(v, a):
+        fused, f1 = split_send(v, "data", perm, width=5, reduce_into=a,
+                               use_fused=True)
+        unfused, f2 = split_send(v, "data", perm, width=5, reduce_into=a,
+                                 use_fused=False)
+        want = a + jax.lax.ppermute(v, "data", perm).astype(jnp.float32)
+        return fused, unfused, want, jnp.maximum(f1, f2)
+
+    fused, unfused, want, flag = jax.jit(jax.shard_map(
+        f, mesh=mesh1, in_specs=(P(), P()), out_specs=(P(),) * 4,
+        axis_names={"data"}, check_vma=False))(t, acc0)
+    res["p2p_reduce_into_exact"] = (
+        bool(jnp.all(jax.lax.bitcast_convert_type(fused, jnp.uint32)
+                     == jax.lax.bitcast_convert_type(unfused, jnp.uint32)))
+        and bool(jnp.all(jax.lax.bitcast_convert_type(fused, jnp.uint32)
+                         == jax.lax.bitcast_convert_type(want, jnp.uint32)))
+        and int(flag) == 0)
+
+
 # -- 5. train-step losslessness on the 3-axis mesh (zero1 + fsdp) --------------
 cfg = configs.get_smoke("smollm_135m")
 

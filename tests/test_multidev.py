@@ -88,3 +88,23 @@ def test_train_step_lossless(part):
 
 def test_kv_transfer_exact():
     assert get("kv_transfer_exact")
+
+
+def test_sched_executor_psum_exact():
+    """psum_with_plan == tree_psum_compressed bit-for-bit on 8 devices."""
+    assert get("sched_psum_exact")
+
+
+def test_sched_plan_cache_reused():
+    """Second trace of the same signature hits the cached CommPlan."""
+    assert get("sched_cache_hit")
+
+
+def test_sched_reduce_scatter_exact():
+    assert get("sched_rs_exact")
+
+
+def test_split_send_reduce_into_exact():
+    """Fused reducing receiver == decode-then-add == acc + ppermute(x),
+    bit-for-bit, across 8 devices."""
+    assert get("p2p_reduce_into_exact")

@@ -60,6 +60,38 @@ def test_model_flops_train_vs_decode():
     assert p / d == pytest.approx(32 * 32768 / 128)
 
 
+def test_analyze_cell_folds_wire_reports(tmp_path):
+    """Cell json carrying a dryrun 'wire' summary -> Roofline wire fields
+    and the wire-aware markdown row; cells without it degrade to dashes."""
+    import json
+    rec = {"arch": "tinyllama_1_1b", "shape": "train_4k", "mesh": "single",
+           "ok": True, "cost": {"flops": 1e12, "bytes accessed": 1e9},
+           "wire": {"n": 4, "n_fused": 2, "raw_bytes": 100 << 20,
+                    "wire_bytes": 64 << 20, "ratio": 0.64,
+                    "decode_hbm_paid": 0,
+                    "decode_hbm_eliminated": 400 << 20}}
+    jp = tmp_path / "cell.json"
+    jp.write_text(json.dumps(rec))
+    (tmp_path / "cell.hlo.txt").write_text(
+        "%ar = f32[512]{0} all-reduce(%x), replica_groups={{0,1}}, to_apply=%a")
+    r = A.analyze_cell(str(jp))
+    assert r.wire_bytes == 64 << 20
+    assert r.wire_raw_bytes == 100 << 20
+    assert r.wire_ratio == pytest.approx(0.64)
+    assert r.decode_hbm_eliminated == 400 << 20
+    row = A.markdown_row_wire(r)
+    assert "0.640" in row and f"{64.0:.1f}" in row
+    # no wire record -> dashes, not a crash
+    rec2 = dict(rec)
+    del rec2["wire"]
+    jp2 = tmp_path / "cell2.json"
+    jp2.write_text(json.dumps(rec2))
+    (tmp_path / "cell2.hlo.txt").write_text("")
+    r2 = A.analyze_cell(str(jp2))
+    assert r2.wire_ratio == 0.0
+    assert "- | - | -" in A.markdown_row_wire(r2)
+
+
 def test_moe_uses_active_params():
     from repro import configs
     dense_equiv = A.model_flops_for("deepseek_v2_lite_16b", "train_4k")

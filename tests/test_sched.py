@@ -1,0 +1,410 @@
+"""Persistent collective runtime: plan compiler, cache, executor.
+
+Quick-gate coverage (1-device meshes + abstract-mesh traces):
+  * plan cache: same signature -> HIT (no recompile); any shape/dtype/
+    policy/axis change -> MISS;
+  * executor bit-parity vs the planless collectives (fused and unfused);
+  * repeated-trace reuse: the second trace of the same step signature
+    replays the cached plan (miss count stays 1);
+  * one consolidated WireReport per plan execution, with totals equal to
+    the planless per-wire records;
+  * backend probe: CPU keeps Pallas off, env override flips it, and the
+    probed backend is recorded in compiled plans.
+
+8-device mesh parity lives in tests/drivers/multidev.py (slow gate).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import sched
+from repro.core import codec
+from repro.core import compressed_collectives as cc
+from repro.core import policy as policy_lib
+from repro.core.policy import CompressionPolicy
+from repro.sched import compile as sched_compile
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1,), ("data",))
+
+
+def bits(a):
+    lay = codec.LAYOUTS.get(jnp.dtype(a.dtype).name)
+    if lay is not None:
+        return jax.lax.bitcast_convert_type(a, lay.uint_dtype)
+    return a
+
+
+def make_tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w_bf16": jnp.asarray(rng.normal(0, 0.02, (256, 32)), jnp.bfloat16),
+        "b_f32": jnp.asarray(rng.normal(0, 1, (4096,)), jnp.float32),
+        "h_f16": jnp.asarray(rng.normal(0, 1, (2048,)), jnp.float16),
+        "step": jnp.asarray(5, jnp.int32),
+    }
+
+
+def _abstract_mesh(k, name="data"):
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(((name, k),))
+    except TypeError:
+        return AbstractMesh((k,), (name,))
+
+
+def _shmap(fn, mesh, n_in=1, n_out=2):
+    return jax.shard_map(fn, mesh=mesh, in_specs=(P(),) * n_in,
+                         out_specs=(P(),) * n_out, axis_names={"data"},
+                         check_vma=False)
+
+
+# ---------------------------------------------------------------------------
+# cache semantics
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_same_signature_miss_on_change():
+    pol = CompressionPolicy(min_bytes=0)
+    cache = sched.PlanCache()
+    tree = make_tree()
+
+    def compile_for(t, p):
+        key = sched_compile.psum_plan_key(t, "data", p, "gradient", 8)
+        return cache.get_or_compile(
+            key, lambda: sched_compile.compile_psum_plan(
+                t, "data", policy=p, n_dev=8, key=key))
+
+    p1 = compile_for(tree, pol)
+    assert cache.stats == sched.cache.CacheStats(hits=0, misses=1)
+    p2 = compile_for(make_tree(seed=9), pol)  # same signature, other values
+    assert p2 is p1
+    assert cache.stats.hits == 1 and cache.stats.misses == 1
+
+    # shape change -> miss
+    t3 = dict(tree, b_f32=jnp.zeros((8192,), jnp.float32))
+    compile_for(t3, pol)
+    assert cache.stats.misses == 2
+    # dtype change -> miss
+    t4 = dict(tree, b_f32=tree["b_f32"].astype(jnp.bfloat16))
+    compile_for(t4, pol)
+    assert cache.stats.misses == 3
+    # policy change -> miss
+    compile_for(tree, dataclasses.replace(pol, fused_decode_reduce=False))
+    assert cache.stats.misses == 4
+    # pytree structure change -> miss
+    compile_for({"only": tree["w_bf16"]}, pol)
+    assert cache.stats.misses == 5
+    assert len(cache) == 5
+
+
+def test_plan_records_backend_and_schedule():
+    pol = CompressionPolicy(min_bytes=0)
+    plan = sched_compile.compile_psum_plan(make_tree(), "data", policy=pol,
+                                           n_dev=8)
+    from repro import kernels
+    assert plan.backend == kernels.backend()
+    assert plan.use_pallas == kernels.default_use_pallas()
+    s = plan.summary()
+    assert s["n_buckets"] == 3 and s["n_raw_leaves"] == 1
+    assert all(p == "two_shot" for p in s["paths"])
+    # sane static accounting; tiny buckets may exceed 1.0 (exception-region
+    # overhead dominates below the paper's 1 MB threshold)
+    assert 0 < s["ratio"] < 2.0
+    # policy gates recorded per bucket: huge threshold -> raw paths
+    plan_raw = sched_compile.compile_psum_plan(
+        make_tree(), "data", policy=CompressionPolicy(min_bytes=1 << 40),
+        n_dev=8)
+    assert all(b.path == "raw_psum" for b in plan_raw.buckets)
+
+
+def test_compile_probe_calibrates_width():
+    """sample= switches width selection to the calibrate probe and records
+    the compressibility estimate in the plan."""
+    tree = {"w": jnp.asarray(
+        np.random.default_rng(0).normal(0, 0.02, 1 << 15), jnp.bfloat16)}
+    pol = CompressionPolicy(min_bytes=0)
+    plan = sched_compile.compile_psum_plan(tree, "data", policy=pol, n_dev=8,
+                                           sample=tree)
+    b = plan.buckets[0]
+    assert b.probe is not None
+    est_exc, est_ratio, ent = b.probe
+    assert 0 <= est_exc <= 1 and 0 < est_ratio < 1 and ent > 0
+    from repro.core.calibrate import choose_width
+    assert b.width == choose_width(tree["w"], block=pol.profile.block).width
+
+
+# ---------------------------------------------------------------------------
+# executor bit-parity vs the planless collectives
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_psum_with_plan_bit_identical(mesh, fused):
+    tree = make_tree(seed=3)
+    pol = CompressionPolicy(min_bytes=0, fused_decode_reduce=fused)
+    cache = sched.PlanCache()
+
+    def planned(t):
+        return sched.psum_with_plan(t, "data", policy=pol, cache=cache)
+
+    def planless(t):
+        return cc.tree_psum_compressed(t, "data", policy=pol)
+
+    a, fa = jax.jit(_shmap(planned, mesh))(tree)
+    b, fb = jax.jit(_shmap(planless, mesh))(tree)
+    assert int(fa) == int(fb) == 0
+    for k in tree:
+        assert a[k].dtype == b[k].dtype
+        assert (bits(a[k]) == bits(b[k])).all(), k
+    assert cache.stats.misses == 1
+
+
+def test_psum_with_plan_mixed_paths(mesh):
+    """min_bytes between leaf sizes: one bucket compresses, others ride the
+    raw paths — parity must hold across the mixed dispatch."""
+    tree = make_tree(seed=4)
+    pol = CompressionPolicy(min_bytes=8192 + 1)  # h_f16 (4 KiB) stays raw
+    cache = sched.PlanCache()
+    a, fa = jax.jit(_shmap(
+        lambda t: sched.psum_with_plan(t, "data", policy=pol, cache=cache),
+        mesh))(tree)
+    b, fb = jax.jit(_shmap(
+        lambda t: cc.tree_psum_compressed(t, "data", policy=pol), mesh))(tree)
+    paths = {bk.dtype_name: bk.path
+             for bk in next(iter(cache._plans.values())).buckets}
+    assert paths["float16"] == "raw_psum"
+    assert paths["bfloat16"] == "two_shot" and paths["float32"] == "two_shot"
+    for k in tree:
+        assert (bits(a[k]) == bits(b[k])).all(), k
+
+
+def test_psum_with_plan_ring_algorithm(mesh):
+    tree = {"w": make_tree(seed=5)["w_bf16"]}
+    pol = CompressionPolicy(min_bytes=0, allreduce_algorithm="ring")
+    a, _ = jax.jit(_shmap(
+        lambda t: sched.psum_with_plan(t, "data", policy=pol,
+                                       cache=sched.PlanCache()), mesh))(tree)
+    b, _ = jax.jit(_shmap(
+        lambda t: cc.tree_psum_compressed(t, "data", policy=pol), mesh))(tree)
+    assert (bits(a["w"]) == bits(b["w"])).all()
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_reduce_scatter_with_plan_bit_identical(mesh, fused):
+    x = jnp.asarray(np.random.default_rng(6).normal(0, 0.02, 8192),
+                    jnp.bfloat16)
+    pol = CompressionPolicy(min_bytes=0, fused_decode_reduce=fused)
+
+    def planned(v):
+        return sched.reduce_scatter_with_plan(v, "data", policy=pol,
+                                              cache=sched.PlanCache())
+
+    def planless(v):
+        return cc.reduce_scatter_compressed(
+            v, "data", width=pol.width_for("gradient"),
+            block=pol.profile.block, exc_frac=pol.profile.exc_frac,
+            use_fused=fused)
+
+    a, fa = jax.jit(_shmap(planned, mesh))(x)
+    b, fb = jax.jit(_shmap(planless, mesh))(x)
+    assert int(fa) == int(fb)
+    assert (jax.lax.bitcast_convert_type(a, jnp.uint32)
+            == jax.lax.bitcast_convert_type(b, jnp.uint32)).all()
+
+
+def test_reduce_scatter_with_plan_raw_gate(mesh):
+    """Below the global-bytes gate the plan routes to the raw RS — same
+    result as zero1's planless raw path."""
+    from repro.optim.zero1 import _raw_reduce_scatter
+    x = jnp.asarray(np.random.default_rng(7).normal(0, 1, 2048), jnp.bfloat16)
+    pol = CompressionPolicy(min_bytes=1 << 30)
+    a, f = jax.jit(_shmap(
+        lambda v: sched.reduce_scatter_with_plan(v, "data", policy=pol,
+                                                 cache=sched.PlanCache()),
+        mesh))(x)
+    b = jax.jit(jax.shard_map(
+        lambda v: _raw_reduce_scatter(v, "data", 1), mesh=mesh,
+        in_specs=(P(),), out_specs=P(), axis_names={"data"},
+        check_vma=False))(x)
+    assert int(f) == 0
+    assert (jax.lax.bitcast_convert_type(a, jnp.uint32)
+            == jax.lax.bitcast_convert_type(b, jnp.uint32)).all()
+
+
+def test_all_gather_with_plan_bit_identical(mesh):
+    y = jnp.asarray(np.random.default_rng(8).normal(0, 0.02, 4096),
+                    jnp.bfloat16)
+    pol = CompressionPolicy(min_bytes=0)
+    a, fa = jax.jit(_shmap(
+        lambda v: sched.all_gather_with_plan(v, "data", policy=pol,
+                                             cache=sched.PlanCache()),
+        mesh))(y)
+    b, fb = jax.jit(_shmap(
+        lambda v: cc.all_gather_compressed(
+            v, "data", width=min(pol.width_for("weight")
+                                 + pol.profile.ag_extra_bits, 8),
+            block=pol.profile.block, exc_frac=pol.profile.exc_frac),
+        mesh))(y)
+    assert int(fa) == int(fb) == 0
+    assert (bits(a.reshape(-1)) == bits(b.reshape(-1))).all()
+
+
+# ---------------------------------------------------------------------------
+# repeated-step reuse + consolidated accounting (abstract 8-device mesh)
+# ---------------------------------------------------------------------------
+
+def test_repeated_trace_hits_cached_plan():
+    """Second trace of the same step signature: cache hit, no recompile of
+    the decision logic (miss count frozen at 1)."""
+    pol = CompressionPolicy(min_bytes=0)
+    cache = sched.PlanCache()
+    tree = jax.eval_shape(lambda: make_tree())
+    am = _abstract_mesh(8)
+
+    def trace():
+        jax.eval_shape(_shmap(
+            lambda t: sched.psum_with_plan(t, "data", policy=pol,
+                                           cache=cache), am), tree)
+
+    trace()
+    assert cache.stats == sched.cache.CacheStats(hits=0, misses=1)
+    trace()
+    assert cache.stats == sched.cache.CacheStats(hits=1, misses=1)
+    trace()
+    assert cache.stats == sched.cache.CacheStats(hits=2, misses=1)
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_consolidated_wire_report(fused):
+    """One plan execution -> ONE WireReport (plan:psum) whose totals equal
+    the planless per-wire records and whose fused flag follows the plan."""
+    pol = CompressionPolicy(min_bytes=0, fused_decode_reduce=fused)
+    tree = jax.eval_shape(lambda: make_tree())
+    am = _abstract_mesh(8)
+
+    policy_lib.clear_wire_reports()
+    jax.eval_shape(_shmap(
+        lambda t: sched.psum_with_plan(t, "data", policy=pol,
+                                       cache=sched.PlanCache()), am), tree)
+    plan_reports = policy_lib.wire_reports()
+    policy_lib.clear_wire_reports()
+    jax.eval_shape(_shmap(
+        lambda t: cc.tree_psum_compressed(t, "data", policy=pol), am), tree)
+    flat_reports = policy_lib.wire_reports()
+    policy_lib.clear_wire_reports()
+
+    assert len(plan_reports) == 1
+    (rep,) = plan_reports
+    assert rep.name == "plan:psum"
+    assert rep.fused is fused
+    assert len(flat_reports) > 1
+    assert rep.raw_bytes == sum(r.raw_bytes for r in flat_reports)
+    assert rep.wire_bytes == sum(r.wire_bytes for r in flat_reports)
+    assert rep.decode_hbm_bytes == sum(r.decode_hbm_bytes
+                                       for r in flat_reports)
+    from repro.roofline.analysis import summarize_wire_reports
+    s_plan = summarize_wire_reports(plan_reports)
+    s_flat = summarize_wire_reports(flat_reports)
+    key = "decode_hbm_eliminated" if fused else "decode_hbm_paid"
+    assert s_plan[key] == s_flat[key] > 0
+
+
+def test_zero1_plan_emits_consolidated_report():
+    """A train-step trace records plan:zero1 reports (the executor drove
+    the sync) instead of loose per-bucket wires."""
+    from repro import configs
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.models import registry
+    from repro.optim import optimizers as opt_lib
+    from repro.train import step as step_lib
+
+    cfg = configs.get_smoke("smollm_135m")
+    mesh = make_smoke_mesh(1)
+    tcfg = step_lib.TrainConfig(
+        microbatches=1, policy=CompressionPolicy(min_bytes=0),
+        optim=opt_lib.OptimConfig(lr=1e-3))
+    step, _ = step_lib.build_train_step(cfg, tcfg, mesh)
+    state, _ = step_lib.build_train_state(cfg, tcfg, mesh,
+                                          jax.random.PRNGKey(0))
+    batch = registry.make_batch(cfg, 2, 16)
+    policy_lib.clear_wire_reports()
+    jax.eval_shape(step, state, batch)
+    reports = policy_lib.wire_reports()
+    policy_lib.clear_wire_reports()
+    names = {r.name for r in reports}
+    assert "plan:zero1" in names
+    assert not any(r.name in ("reduce_scatter", "all_gather")
+                   for r in reports)
+
+
+# ---------------------------------------------------------------------------
+# backend probe
+# ---------------------------------------------------------------------------
+
+def test_backend_probe_cpu_defaults(monkeypatch):
+    from repro import kernels
+    monkeypatch.delenv("REPRO_USE_PALLAS", raising=False)
+    kernels.probe_cache_clear()
+    try:
+        assert kernels.backend() == jax.default_backend()
+        if kernels.backend() != "tpu":
+            assert kernels.default_use_pallas() is False
+            assert kernels.default_interpret() is True
+        monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+        kernels.probe_cache_clear()
+        assert kernels.default_use_pallas() is True
+        monkeypatch.setenv("REPRO_USE_PALLAS", "0")
+        kernels.probe_cache_clear()
+        assert kernels.default_use_pallas() is False
+        assert kernels.resolve_use_pallas(True) is True
+        assert kernels.resolve_use_pallas(None) is False
+    finally:
+        monkeypatch.delenv("REPRO_USE_PALLAS", raising=False)
+        kernels.probe_cache_clear()
+
+
+def test_probe_drives_plan_and_kernel_dispatch(monkeypatch):
+    """REPRO_USE_PALLAS=1 flows probe -> plan.use_pallas -> ops dispatch
+    (interpret-mode Pallas on CPU), with bit-identical results."""
+    from repro import kernels
+    monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+    kernels.probe_cache_clear()
+    try:
+        pol = CompressionPolicy(min_bytes=0)
+        plan = sched_compile.compile_psum_plan(make_tree(), "data",
+                                               policy=pol, n_dev=8)
+        assert plan.use_pallas is True
+        # dispatch parity at the kernel seam (TILE_G-aligned wire)
+        from repro.kernels import ops, ref
+        from repro.kernels.decode_reduce import TILE_G
+        x = cc._encode_chunks(
+            jnp.asarray(np.random.default_rng(0).normal(0, 0.02,
+                                                        (1, 32 * TILE_G)),
+                        jnp.bfloat16), width=5, block=512, exc_frac=0.02)
+        fused, _ = cc._decode_reduce_chunks(
+            x, dtype=jnp.bfloat16, n=32 * TILE_G, width=5, block=512,
+            use_pallas=None)  # None -> probe -> True
+        ref_out, _ = cc._decode_reduce_chunks(
+            x, dtype=jnp.bfloat16, n=32 * TILE_G, width=5, block=512,
+            use_pallas=False)
+        assert (jax.lax.bitcast_convert_type(fused, jnp.uint32)
+                == jax.lax.bitcast_convert_type(ref_out, jnp.uint32)).all()
+    finally:
+        monkeypatch.delenv("REPRO_USE_PALLAS", raising=False)
+        kernels.probe_cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# benchmark smoke (CI/tooling gate: must stay fast)
+# ---------------------------------------------------------------------------
+
+def test_fig_sched_smoke_runs():
+    from benchmarks.fig_sched import run
+    out = run(smoke=True)
+    assert out["hit_rate"] > 0.5
+    assert out["parity"] is True

@@ -12,7 +12,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import codec
 from repro.core.split_send import (chunked_pipeline_send, encode_send,
-                                   split_send)
+                                   p2p_send, split_send)
 
 STRATEGIES = [("split", split_send), ("encode", encode_send),
               ("chunked", chunked_pipeline_send)]
@@ -69,3 +69,117 @@ def test_chunked_rejects_empty():
     with pytest.raises(ValueError):
         chunked_pipeline_send(jnp.zeros((0,), jnp.bfloat16), "data",
                               [(0, 0)], width=5)
+
+
+# -- fused reducing receiver (ROADMAP: split_send -> _decode_reduce_chunks) --
+
+def bits32(a):
+    return jax.lax.bitcast_convert_type(a.astype(jnp.float32), jnp.uint32)
+
+
+@pytest.mark.parametrize("dt", ["bfloat16", "float32"])
+@pytest.mark.parametrize("n", [100, 2048, 512 * 4 + 17])
+def test_split_send_reduce_into_fused_parity(mesh, dt, n):
+    """Reducing receiver: the fused decode+reduce receive must be
+    bit-identical to decode-then-add (and to acc + x, since the wire is
+    lossless and the perm is the identity)."""
+    rng = np.random.default_rng(n)
+    lay = codec.LAYOUTS[dt]
+    x = jnp.asarray(rng.normal(0, 0.02, n), lay.dtype)
+    acc = jnp.asarray(rng.normal(0, 1, n), jnp.float32)
+
+    def body(v, a):
+        fused, f1 = split_send(v, "data", [(0, 0)], width=5, reduce_into=a,
+                               use_fused=True)
+        unfused, f2 = split_send(v, "data", [(0, 0)], width=5, reduce_into=a,
+                                 use_fused=False)
+        return fused, unfused, jnp.maximum(f1, f2)
+
+    fused, unfused, flag = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P(), P()),
+        axis_names={"data"}, check_vma=False))(x, acc)
+    assert int(flag) == 0
+    assert (bits32(fused) == bits32(unfused)).all()
+    assert (bits32(fused) == bits32(acc + x.astype(jnp.float32))).all()
+
+
+def test_split_send_reduce_into_exception_blocks(mesh):
+    """Poison values ride the exception region; the fused receiver's exact
+    patch-up must keep parity with decode-then-add bit-for-bit."""
+    rng = np.random.default_rng(7)
+    x = np.asarray(rng.normal(0, 0.02, 4096))
+    x[100], x[700], x[2049] = 1e30, 1e-30, -1e30
+    x = jnp.asarray(x, jnp.bfloat16)
+    acc = jnp.asarray(rng.normal(0, 1, 4096), jnp.float32)
+
+    def body(v, a):
+        fused, f1 = split_send(v, "data", [(0, 0)], width=4, reduce_into=a,
+                               use_fused=True)
+        unfused, f2 = split_send(v, "data", [(0, 0)], width=4, reduce_into=a,
+                                 use_fused=False)
+        return fused, unfused, jnp.maximum(f1, f2)
+
+    fused, unfused, flag = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P(), P()),
+        axis_names={"data"}, check_vma=False))(x, acc)
+    assert int(flag) == 0
+    assert (bits32(fused) == bits32(unfused)).all()
+
+
+def test_p2p_reducing_receiver_hbm_accounting():
+    """A reducing receiver's WireReports must carry the decoded-float HBM
+    round-trip: ELIMINATED for the fused split_send path, PAID for the
+    decode-then-add strategies — comparable across strategies."""
+    import jax.numpy as jnp
+    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from repro.core import policy as policy_lib
+    from repro.core.policy import CompressionPolicy
+
+    try:
+        am = AbstractMesh((("data", 8),))
+    except TypeError:
+        am = AbstractMesh((8,), ("data",))
+    pol = CompressionPolicy(min_bytes=0)
+    perm = [(i, (i + 1) % 8) for i in range(8)]
+    x = jax.ShapeDtypeStruct((1 << 14,), jnp.bfloat16)
+
+    def reports_for(strategy):
+        policy_lib.clear_wire_reports()
+        jax.eval_shape(jax.shard_map(
+            lambda v, a: p2p_send(v, "data", perm, policy=pol,
+                                  strategy=strategy, reduce_into=a),
+            mesh=am, in_specs=(P(), P()), out_specs=(P(), P()),
+            axis_names={"data"}, check_vma=False),
+            x, jax.ShapeDtypeStruct((1 << 14,), jnp.float32))
+        reps = policy_lib.wire_reports()
+        policy_lib.clear_wire_reports()
+        return reps
+
+    fused = reports_for("split_send")
+    assert all(r.fused and r.decode_hbm_bytes > 0 for r in fused)
+    unfused = reports_for("encode_send")
+    assert all(not r.fused and r.decode_hbm_bytes > 0 for r in unfused)
+    assert (sum(r.decode_hbm_bytes for r in unfused)
+            == sum(r.decode_hbm_bytes for r in fused))
+
+
+def test_p2p_send_reduce_into_all_strategies(mesh):
+    """p2p_send threads the reducing receiver through every strategy and
+    the raw fallback with identical (bit-exact) results."""
+    from repro.core.policy import CompressionPolicy
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(0, 0.02, 2048), jnp.bfloat16)
+    acc = jnp.asarray(rng.normal(0, 1, 2048), jnp.float32)
+    want = acc + x.astype(jnp.float32)
+    pols = [CompressionPolicy(min_bytes=0), CompressionPolicy.disabled()]
+    for pol in pols:
+        for strat in ("split_send", "encode_send", "chunked"):
+            def body(v, a, _p=pol, _s=strat):
+                return p2p_send(v, "data", [(0, 0)], policy=_p, strategy=_s,
+                                reduce_into=a)
+
+            got, flag = jax.jit(jax.shard_map(
+                body, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+                axis_names={"data"}, check_vma=False))(x, acc)
+            assert int(flag) == 0
+            assert (bits32(got) == bits32(want)).all(), (strat, pol.enabled)
