@@ -23,6 +23,7 @@ MODULES = [
     ("fig15", "benchmarks.fig15_strategies"),
     ("fig16", "benchmarks.fig16_resources"),
     ("sched", "benchmarks.fig_sched"),
+    ("encode", "benchmarks.fig_encode"),
 ]
 
 

@@ -15,6 +15,10 @@ Production properties:
     same layout supports per-shard files (one writer per data-parallel
     rank); this container is single-process so files hold full tensors.
   * **retention** — ``keep`` most recent checkpoints are retained.
+  * **plan-cache persistence** — ``save_plans``/``restore_plans`` serialize
+    the sched runtime's compiled ``CommPlan``s (pure data) next to the
+    checkpoints, so a restart replays the cached collective schedules
+    instead of recompiling them (ROADMAP "Plan-cache persistence").
 """
 from __future__ import annotations
 
@@ -108,6 +112,32 @@ class CheckpointManager:
                        and not d.endswith(".tmp"))
         for d in ckpts[: -self.keep] if self.keep > 0 else []:
             shutil.rmtree(os.path.join(self.dir, d))
+
+    # -- plan-cache persistence ----------------------------------------------
+
+    PLAN_CACHE_FILE = "plan_cache.pkl"
+
+    def save_plans(self, cache=None) -> str:
+        """Serialize the sched plan cache next to the checkpoints.
+
+        Plans are signature-keyed (not step-keyed): one file serves every
+        step, refreshed on each save.  Returns the file path."""
+        from repro.sched import cache as sched_cache
+
+        path = os.path.join(self.dir, self.PLAN_CACHE_FILE)
+        sched_cache.save_plans(path, cache)
+        return path
+
+    def restore_plans(self, cache=None) -> int:
+        """Load a previously saved plan cache (no-op when absent or when
+        the recorded backend probe no longer matches).  Returns the number
+        of plans inserted."""
+        from repro.sched import cache as sched_cache
+
+        path = os.path.join(self.dir, self.PLAN_CACHE_FILE)
+        if not os.path.exists(path):
+            return 0
+        return sched_cache.load_plans(path, cache)
 
     # -- restore --------------------------------------------------------------
 

@@ -36,6 +36,17 @@ decode-then-reduce path for A/B comparison; ``n_groups % TILE_G != 0``
 falls back from the Pallas kernel to the fused pure-jnp reference
 automatically (``kernels/ops.decode_reduce``).
 
+Fused TRANSMIT side (paper §3.2 Step 1): every compressed send phase
+encodes through ``kernels/ops.encode_fused_chunks`` by default — one pass
+that reads each input block from HBM once and emits the packed exponent
+payload and lo planes directly, instead of materializing the split planes
+between ``codec.split_planes`` and the bit-plane pack.  ``fused_encode=
+False`` (policy knob ``CompressionPolicy.fused_encode``) keeps the
+three-pass composition for A/B accounting; both are bit-identical, and the
+Pallas-vs-jnp choice inside the fused dispatch follows the backend probe
+(``use_pallas``) with ragged shapes padded to the kernel tile rather than
+silently degrading.
+
 Every compressed wire records a trace-time ``WireReport``
 (``policy.record_wire_report``) with raw vs wire bytes and the decoded-
 float HBM round-trip the unfused path would incur — the roofline and
@@ -55,6 +66,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import kernels
 from repro.core import codec, packing
 from repro.core.policy import (CompressionPolicy, WireReport,
                                record_wire_report)
@@ -160,8 +172,27 @@ def psum_raw_twoshot(x: jax.Array, axes, *, acc_dtype=jnp.float32):
 # One vectorized encode == paper's "compress once as a large chunk or batch".
 # ---------------------------------------------------------------------------
 
-def _encode_chunks(x2d: jax.Array, *, width: int, block: int, exc_frac: float):
+def _encode_chunks(x2d: jax.Array, *, width: int, block: int, exc_frac: float,
+                   fused: bool = True, use_pallas: bool | None = None):
+    """Vectorized transmit-side encode of (n_chunks, chunk) rows.
+
+    ``fused=True`` (default) is the one-pass split+pack dispatch (paper
+    §3.2 Step 1): ``kernels/ops.encode_fused_chunks`` reads each input
+    element from HBM once and emits the packed wire directly (Pallas kernel
+    under the backend probe, fused jnp reference elsewhere).  ``fused=False``
+    keeps the legacy three-pass composition — split, materialize planes,
+    pack — for A/B accounting.  Both are bit-identical."""
     lay = codec.layout_of(x2d.dtype)
+    if fused:
+        if x2d.shape[1] % block == 0:
+            return kernel_ops.encode_fused_chunks(
+                x2d, width, block=block, exc_frac=exc_frac,
+                use_pallas=use_pallas)
+        # every in-repo collective pads chunks to a block multiple; a
+        # future misaligned caller degrades VISIBLY, not silently
+        kernels.record_fallback(
+            "encode_fused_chunks",
+            f"chunk={x2d.shape[1]} not a {block} multiple")
 
     def enc(row):
         exp, lo = codec.split_planes(row)
@@ -212,15 +243,30 @@ def wire_nbytes(wire: dict) -> int:
     return sum(int(np.prod(v.shape)) * v.dtype.itemsize for v in wire.values())
 
 
+def encode_hbm_bytes_for(n_elems: int, itemsize: int) -> int:
+    """Redundant split-plane HBM round-trip of an UNFUSED encode: the
+    exponent plane (1 B/elem) and lo plane (itemsize B/elem) are written
+    after the split and re-read by the pack — 2*(1+itemsize) B/element.
+    The fused one-pass encode (kernels/ops.encode_fused) eliminates it."""
+    return int(2 * (1 + itemsize) * n_elems)
+
+
 def _record_collective(name: str, axis_name, *, raw_bytes: int, wire: dict,
-                       fused: bool, decoded_elems: int = 0) -> None:
+                       fused: bool, decoded_elems: int = 0,
+                       encoded_elems: int = 0, itemsize: int = 0,
+                       encode_fused: bool = True) -> None:
     """Emit the trace-time WireReport for one compressed wire.
 
     ``decoded_elems`` is the decoded-f32 element count an UNFUSED receive
     side materializes between decode and reduce (write + re-read = 8 bytes
     per element); pass 0 where no reduction follows the decode.  ``fused``
     records whether this wire actually paid that round-trip (False) or
-    eliminated it (True)."""
+    eliminated it (True).
+
+    ``encoded_elems``/``itemsize`` give the transmit-side mirror: the
+    split-plane round-trip an unfused encode materializes between split and
+    pack (:func:`encode_hbm_bytes_for`); ``encode_fused`` records whether
+    this wire's encode eliminated it (one-pass split+pack) or paid it."""
     record_wire_report(WireReport(
         name=name,
         axis=str(axis_name),
@@ -228,6 +274,8 @@ def _record_collective(name: str, axis_name, *, raw_bytes: int, wire: dict,
         wire_bytes=wire_nbytes(wire),
         fused=bool(fused),
         decode_hbm_bytes=int(8 * decoded_elems),
+        encode_fused=bool(encode_fused),
+        encode_hbm_bytes=encode_hbm_bytes_for(encoded_elems, itemsize),
     ))
 
 
@@ -289,7 +337,7 @@ def _decode_reduce_chunks(
 def reduce_scatter_compressed(
     x: jax.Array, axis_name, *, width: int, block: int = 512,
     exc_frac: float = 0.02, acc_dtype=jnp.float32, use_fused: bool = True,
-    use_pallas: bool | None = None,
+    use_pallas: bool | None = None, fused_encode: bool = True,
 ):
     """Compressed reduce-scatter over a flat array.
 
@@ -308,7 +356,8 @@ def reduce_scatter_compressed(
     n_dev = _axis_size(axis_name)
     xf = _pad_flat(x.reshape(-1), n_dev * block)
     chunks = xf.reshape(n_dev, -1)
-    wire = _encode_chunks(chunks, width=width, block=block, exc_frac=exc_frac)
+    wire = _encode_chunks(chunks, width=width, block=block, exc_frac=exc_frac,
+                          fused=fused_encode, use_pallas=use_pallas)
     # all_to_all: leaf axis 0 is the destination-device axis
     recv = jax.tree.map(
         lambda a: jax.lax.all_to_all(a, axis_name, 0, 0, tiled=False), wire
@@ -317,6 +366,8 @@ def reduce_scatter_compressed(
     _record_collective(
         "reduce_scatter", axis_name, raw_bytes=chunks.size * x.dtype.itemsize,
         wire=wire, fused=fused, decoded_elems=chunks.size,
+        encoded_elems=chunks.size, itemsize=x.dtype.itemsize,
+        encode_fused=fused_encode,
     )
     if fused:
         return _decode_reduce_chunks(
@@ -331,15 +382,19 @@ def reduce_scatter_compressed(
 
 def all_gather_compressed(
     y: jax.Array, axis_name, *, width: int, block: int = 512,
-    exc_frac: float = 0.02,
+    exc_frac: float = 0.02, fused_encode: bool = True,
+    use_pallas: bool | None = None,
 ):
-    """Compressed all-gather of a flat local chunk: ONE encode at the source,
-    one decode of the gathered wire.  The decode output IS the result (no
-    reduction follows), so there is nothing to fuse on this phase.
+    """Compressed all-gather of a flat local chunk: ONE encode at the source
+    (fused split+pack by default), one decode of the gathered wire.  The
+    decode output IS the result (no reduction follows), so there is nothing
+    to fuse on the receive side of this phase.
     Returns (stacked (n_dev, chunk), flag)."""
     n_dev = _axis_size(axis_name)
     yf = _pad_flat(y.reshape(-1), block)
-    wire = _encode_chunks(yf[None], width=width, block=block, exc_frac=exc_frac)
+    wire = _encode_chunks(yf[None], width=width, block=block,
+                          exc_frac=exc_frac, fused=fused_encode,
+                          use_pallas=use_pallas)
     gathered = jax.tree.map(
         lambda a: jax.lax.all_gather(a, axis_name, axis=0, tiled=False), wire
     )
@@ -348,6 +403,8 @@ def all_gather_compressed(
         "all_gather", axis_name,
         raw_bytes=n_dev * yf.size * y.dtype.itemsize,
         wire=gathered, fused=False, decoded_elems=0,
+        encoded_elems=yf.size, itemsize=y.dtype.itemsize,
+        encode_fused=fused_encode,
     )
     vals, flag = _decode_chunks(
         gathered, dtype=y.dtype, n=yf.shape[0], width=width, block=block
@@ -372,6 +429,7 @@ def psum_compressed(
             x, axis_name, width=policy.width_for(tensor_class),
             block=policy.profile.block, exc_frac=policy.profile.exc_frac,
             out_dtype=out_dtype, use_fused=policy.fused_decode_reduce,
+            fused_encode=policy.fused_encode,
         )
     width = policy.width_for(tensor_class)
     block = policy.profile.block
@@ -380,6 +438,7 @@ def psum_compressed(
     red, f1 = reduce_scatter_compressed(
         x, axis_name, width=width, block=block, exc_frac=exc,
         use_fused=policy.fused_decode_reduce,
+        fused_encode=policy.fused_encode,
     )
     # The reduced chunk is a different distribution (sums of D values shift
     # exponents by ~log2(D) uniformly, which the per-block base absorbs);
@@ -387,7 +446,8 @@ def psum_compressed(
     # exception region + overflow flag cover the tail exactly.
     ag_width = min(width + policy.profile.ag_extra_bits, 8)
     gath, f2 = all_gather_compressed(
-        red.astype(out_dtype), axis_name, width=ag_width, block=block, exc_frac=exc
+        red.astype(out_dtype), axis_name, width=ag_width, block=block,
+        exc_frac=exc, fused_encode=policy.fused_encode,
     )
     out = gath.reshape(-1)[:n].reshape(x.shape).astype(out_dtype)
     return out, jnp.maximum(f1, f2)
@@ -396,6 +456,7 @@ def psum_compressed(
 def psum_compressed_ring(
     x: jax.Array, axis_name, *, width: int, block: int = 512,
     exc_frac: float = 0.02, out_dtype=None, use_fused: bool = True,
+    fused_encode: bool = True, use_pallas: bool | None = None,
 ):
     """Ring all-reduce with per-hop encode/decode — the paper's NEGATIVE
     baseline (Fig. 9b): every chunk is re-compressed at every hop.  Kept for
@@ -417,13 +478,17 @@ def psum_compressed_ring(
     flag = jnp.int32(0)
 
     def hop(v, phase):
-        wire = _encode_chunks(v[None], width=width, block=block, exc_frac=exc_frac)
+        wire = _encode_chunks(v[None], width=width, block=block,
+                              exc_frac=exc_frac, fused=fused_encode,
+                              use_pallas=use_pallas)
         recv = jax.tree.map(lambda a: jax.lax.ppermute(a, axis_name, perm), wire)
         _record_collective(
             f"ring_hop_{phase}", axis_name,
             raw_bytes=chunk * v.dtype.itemsize, wire=wire,
             fused=use_fused and phase == "rs",
             decoded_elems=chunk if phase == "rs" else 0,
+            encoded_elems=chunk, itemsize=v.dtype.itemsize,
+            encode_fused=fused_encode,
         )
         return recv
 
@@ -489,23 +554,25 @@ def psum_compressed_hierarchical(
     block = policy.profile.block
     exc = policy.profile.exc_frac
     fused = policy.fused_decode_reduce
+    fenc = policy.fused_encode
     n = int(np.prod(x.shape))
     # 1. intra-pod reduce-scatter: each device owns 1/data of the pod sum
     shard, f1 = reduce_scatter_compressed(
         x, intra_axis, width=width, block=block, exc_frac=exc,
-        use_fused=fused)
+        use_fused=fused, fused_encode=fenc)
     # 2. cross-pod all-reduce of the shard (two-shot, compressed)
     shard = shard.astype(out_dtype)
     red, f2 = reduce_scatter_compressed(
         shard, inter_axis, width=width, block=block, exc_frac=exc,
-        use_fused=fused)
+        use_fused=fused, fused_encode=fenc)
     gat, f3 = all_gather_compressed(
         red.astype(out_dtype), inter_axis, width=width, block=block,
-        exc_frac=exc)
+        exc_frac=exc, fused_encode=fenc)
     shard_full = gat.reshape(-1)[: shard.shape[0]].astype(out_dtype)
     # 3. intra-pod all-gather of the fully-reduced shards
     out, f4 = all_gather_compressed(
-        shard_full, intra_axis, width=width, block=block, exc_frac=exc)
+        shard_full, intra_axis, width=width, block=block, exc_frac=exc,
+        fused_encode=fenc)
     out = out.reshape(-1)[:n].reshape(x.shape).astype(out_dtype)
     flag = jnp.maximum(jnp.maximum(f1, f2), jnp.maximum(f3, f4))
     return out, flag
@@ -531,7 +598,8 @@ def all_to_all_compressed(
     inner = int(np.prod(x.shape[1:]))
     x2d = jax.vmap(lambda r: _pad_flat(r.reshape(-1), block))(x.reshape(n_dev, inner))
     wire = _encode_chunks(
-        x2d, width=width, block=block, exc_frac=policy.profile.exc_frac
+        x2d, width=width, block=block, exc_frac=policy.profile.exc_frac,
+        fused=policy.fused_encode,
     )
     recv = jax.tree.map(
         lambda a: jax.lax.all_to_all(a, axis_name, 0, 0, tiled=False), wire
@@ -539,6 +607,8 @@ def all_to_all_compressed(
     _record_collective(
         "all_to_all", axis_name, raw_bytes=x2d.size * x.dtype.itemsize,
         wire=wire, fused=False, decoded_elems=0,
+        encoded_elems=x2d.size, itemsize=x.dtype.itemsize,
+        encode_fused=policy.fused_encode,
     )
     vals, flag = _decode_chunks(
         recv, dtype=x.dtype, n=x2d.shape[1], width=width, block=block
@@ -559,12 +629,15 @@ def ppermute_compressed(
     block = policy.profile.block
     xf = _pad_flat(x.reshape(-1), block)
     wire = _encode_chunks(
-        xf[None], width=width, block=block, exc_frac=policy.profile.exc_frac
+        xf[None], width=width, block=block, exc_frac=policy.profile.exc_frac,
+        fused=policy.fused_encode,
     )
     recv = jax.tree.map(lambda a: jax.lax.ppermute(a, axis_name, perm), wire)
     _record_collective(
         "ppermute", axis_name, raw_bytes=xf.size * x.dtype.itemsize,
         wire=wire, fused=False, decoded_elems=0,
+        encoded_elems=xf.size, itemsize=x.dtype.itemsize,
+        encode_fused=policy.fused_encode,
     )
     vals, flag = _decode_chunks(
         recv, dtype=x.dtype, n=xf.shape[0], width=width, block=block

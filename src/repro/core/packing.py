@@ -224,9 +224,30 @@ class CompressedMessage:
 
 
 def encode_message(
-    x: jax.Array, *, width: int, block: int = 512, exc_frac: float = 0.02
+    x: jax.Array, *, width: int, block: int = 512, exc_frac: float = 0.02,
+    fused: bool = True, use_pallas: bool | None = None,
 ) -> CompressedMessage:
+    """Encode a float tensor into the in-collective wire format.
+
+    ``fused=True`` (default) routes through the one-pass split+pack dispatch
+    (``kernels/ops.encode_fused``: Pallas on TPU / fused jnp elsewhere,
+    ragged shapes pad to the kernel tile); ``fused=False`` keeps the legacy
+    three-pass composition.  Both are bit-identical."""
     lay = codec.layout_of(x.dtype)
+    xf = x.reshape(-1)
+    if fused:
+        from repro.kernels import ops as kernel_ops  # lazy: kernels import us
+
+        w = kernel_ops.encode_fused(xf, width, block=block, exc_frac=exc_frac,
+                                    use_pallas=use_pallas)
+        packed = PackedPlane(
+            payload=w["payload"], bases=w["bases"], exc_idx=w["exc_idx"],
+            exc_raw=w["exc_raw"], overflow=w["overflow"], width=width,
+            block=block, n=xf.shape[0], exp_bits=8,
+        )
+        return CompressedMessage(
+            lo=w["lo"], exp=packed, dtype_name=lay.name, shape=tuple(x.shape)
+        )
     exp, lo = codec.split_planes(x)
     lo32 = _pad_to(lo.astype(jnp.uint32), GROUP, pad_mode="zero")
     lo_planes = bitplane_pack(lo32, lay.lo_bits)

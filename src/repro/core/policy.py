@@ -44,6 +44,13 @@ class CompressionPolicy:
     # device-index order); this knob exists for A/B roofline accounting and
     # as an escape hatch.
     fused_decode_reduce: bool = True
+    # fused split+pack on the TRANSMIT side (paper §3.2 Step 1): every
+    # compressed send encodes through kernels/ops.encode_fused — one pass
+    # that reads the input once and emits the wire-format planes directly,
+    # instead of materializing the exponent/lo planes in HBM between the
+    # split and the pack.  Bit-identical to the unfused composition; the
+    # knob exists for A/B roofline accounting and as an escape hatch.
+    fused_encode: bool = True
 
     def should_compress(
         self, x, axis_name: str, *, tensor_class: str = "gradient"
@@ -82,6 +89,16 @@ class WireReport:
     were *paid* (``fused=False``) or *eliminated* (``fused=True``).  It is 0
     for collectives whose decode output *is* the result (all-gather, P2P):
     there is no redundant materialization to eliminate.
+
+    ``encode_hbm_bytes`` is the transmit-side mirror: the redundant split-
+    plane HBM round-trip an UNFUSED encode incurs between the float split
+    and the bit-plane pack (write + re-read of the materialized exponent
+    plane, 1 B/element, and lo plane, ``itemsize`` B/element — so
+    ``2 * (1 + itemsize)`` B/element encoded).  ``encode_fused`` says
+    whether the wire's encode eliminated it (fused one-pass split+pack,
+    paper §3.2 Step 1) or paid it.  It is recorded for every compressed
+    send; ``split_send`` deliberately pays it (the early lo-plane transfer
+    REQUIRES the materialized split — the round-trip buys wire overlap).
     """
 
     name: str
@@ -90,6 +107,8 @@ class WireReport:
     wire_bytes: int
     fused: bool = False
     decode_hbm_bytes: int = 0
+    encode_fused: bool = False
+    encode_hbm_bytes: int = 0
 
     @property
     def ratio(self) -> float:

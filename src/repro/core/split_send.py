@@ -37,6 +37,7 @@ from repro.core.compressed_collectives import (
     _decode_reduce_chunks,
     _encode_chunks,
     _pad_flat,
+    encode_hbm_bytes_for,
 )
 from repro.core.policy import (CompressionPolicy, WireReport,
                                record_wire_report)
@@ -44,18 +45,26 @@ from repro.core.policy import (CompressionPolicy, WireReport,
 
 def _record_p2p(name: str, axis_name, *, n_elems: int, dtype,
                 lo_planes, exp_wire: dict, fused: bool = False,
-                decoded_elems: int = 0) -> None:
+                decoded_elems: int = 0, encode_fused: bool = False) -> None:
     """Trace-time WireReport for a P2P strategy.  When the receive is a
     pure decode (``decoded_elems=0``) there is no decoded-float round-trip
     to account; a reducing receiver (``reduce_into``) materializes the
-    decoded floats between decode and add unless it runs fused."""
+    decoded floats between decode and add unless it runs fused.
+
+    ``encode_fused`` mirrors that on the transmit side: ``split_send``
+    always PAYS the split-plane round-trip (the early lo transfer requires
+    the materialized split — that is the strategy), while ``encode_send``
+    eliminates it with the one-pass fused encode."""
+    itemsize = jnp.dtype(dtype).itemsize
     wire_bytes = int(lo_planes.size * 4) + sum(
         int(np.prod(v.shape)) * v.dtype.itemsize for v in exp_wire.values())
     record_wire_report(WireReport(
         name=name, axis=str(axis_name),
-        raw_bytes=int(n_elems) * jnp.dtype(dtype).itemsize,
+        raw_bytes=int(n_elems) * itemsize,
         wire_bytes=wire_bytes, fused=fused,
         decode_hbm_bytes=int(8 * decoded_elems),
+        encode_fused=encode_fused,
+        encode_hbm_bytes=encode_hbm_bytes_for(n_elems, itemsize),
     ))
 
 
@@ -144,31 +153,52 @@ def split_send(
 
 def encode_send(
     x: jax.Array, axis_name, perm, *, width: int, block: int = 512,
-    exc_frac: float = 0.02,
+    exc_frac: float = 0.02, fused_encode: bool = True,
+    use_pallas: bool | None = None,
 ):
     """Naive baseline (paper Fig. 4a): transmit only after FULL compression.
 
     The ``optimization_barrier`` ties the lo-plane transfer to the encoded
-    exponent payload, forcing the serialization the paper measures."""
+    exponent payload, forcing the serialization the paper measures.  Since
+    nothing ships early anyway, the encode itself routes through the fused
+    one-pass split+pack (``kernels/ops.encode_fused``) by default — the
+    serialization under study is transfer-vs-encode ordering, not the
+    encode's internal HBM traffic.  ``fused_encode=False`` keeps the
+    three-pass composition (bit-identical)."""
     lay = codec.layout_of(x.dtype)
     n = int(np.prod(x.shape))
     xf = _pad_flat(x.reshape(-1), block)
-    exp, lo = codec.split_planes(xf)
-    lo_planes = packing.bitplane_pack(
-        packing._pad_to(lo.astype(jnp.uint32), packing.GROUP, "zero"), lay.lo_bits
-    )
-    pk = packing.pack_exponents(exp, width=width, block=block, exc_frac=exc_frac)
+    if fused_encode:
+        from repro.kernels import ops as kernel_ops
+
+        w = kernel_ops.encode_fused(xf, width, block=block, exc_frac=exc_frac,
+                                    use_pallas=use_pallas)
+        lo_planes = w["lo"]
+        wire = {
+            "payload": w["payload"], "bases": w["bases"],
+            "exc_idx": w["exc_idx"], "exc_raw": w["exc_raw"],
+            "overflow": w["overflow"],
+        }
+    else:
+        exp, lo = codec.split_planes(xf)
+        lo_planes = packing.bitplane_pack(
+            packing._pad_to(lo.astype(jnp.uint32), packing.GROUP, "zero"),
+            lay.lo_bits,
+        )
+        pk = packing.pack_exponents(exp, width=width, block=block,
+                                    exc_frac=exc_frac)
+        wire = {
+            "payload": pk.payload, "bases": pk.bases, "exc_idx": pk.exc_idx,
+            "exc_raw": pk.exc_raw, "overflow": pk.overflow,
+        }
     # serialize: nothing ships until the whole message is encoded
-    lo_planes, payload = jax.lax.optimization_barrier((lo_planes, pk.payload))
+    lo_planes, payload = jax.lax.optimization_barrier(
+        (lo_planes, wire["payload"]))
+    wire = dict(wire, payload=payload)  # barriered payload ships
     lo_recv = _permute(lo_planes, axis_name, perm)
-    wire = {
-        "payload": payload, "bases": pk.bases, "exc_idx": pk.exc_idx,
-        "exc_raw": pk.exc_raw, "overflow": pk.overflow,
-    }
-    del pk  # barriered payload is the only one that may ship
     recv = jax.tree.map(lambda a: _permute(a, axis_name, perm), wire)
     _record_p2p("encode_send", axis_name, n_elems=xf.shape[0], dtype=x.dtype,
-                lo_planes=lo_planes, exp_wire=wire)
+                lo_planes=lo_planes, exp_wire=wire, encode_fused=fused_encode)
     rpk = packing.PackedPlane(
         payload=recv["payload"], bases=recv["bases"], exc_idx=recv["exc_idx"],
         exc_raw=recv["exc_raw"], overflow=recv["overflow"], width=width,
@@ -184,7 +214,7 @@ def encode_send(
 
 def chunked_pipeline_send(
     x: jax.Array, axis_name, perm, *, width: int, chunks: int = 4,
-    block: int = 512, exc_frac: float = 0.02,
+    block: int = 512, exc_frac: float = 0.02, fused_encode: bool = True,
 ):
     """Chunk-based pipelining baseline (paper Fig. 4b/c): C chunks, each
     fully encoded then sent, chained so chunk k+1's encode waits on chunk
@@ -212,7 +242,8 @@ def chunked_pipeline_send(
         if token is not None:  # chain: serialize chunk pipeline stages
             part, _ = jax.lax.optimization_barrier((part, token))
         got, f = encode_send(
-            part, axis_name, perm, width=width, block=block, exc_frac=exc_frac
+            part, axis_name, perm, width=width, block=block,
+            exc_frac=exc_frac, fused_encode=fused_encode,
         )
         token = got
         outs.append(got)
@@ -245,6 +276,7 @@ def p2p_send(
     if strategy == "split_send":
         return split_send(x, axis_name, perm, reduce_into=reduce_into,
                           use_fused=policy.fused_decode_reduce, **kw)
+    kw["fused_encode"] = policy.fused_encode
     fn = {"encode_send": encode_send, "chunked": chunked_pipeline_send}[strategy]
     if reduce_into is None:
         return fn(x, axis_name, perm, **kw)

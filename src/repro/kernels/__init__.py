@@ -18,11 +18,49 @@ toolchain).  The sched plan compiler records the probed backend in every
 from __future__ import annotations
 
 import functools
+import logging
 import os
 
 import jax
 
 _TRUTHY = ("1", "true", "True", "yes", "on")
+
+_logger = logging.getLogger("repro.kernels")
+
+# ---------------------------------------------------------------------------
+# Dispatch-fallback accounting.  The fast paths gate on shape conditions
+# (tile-multiple for the Pallas kernels, block-multiple chunks for the
+# fused chunked encode); when a caller requested the fast path but the
+# gate routes to a fallback implementation, the degrade used to be silent —
+# plans recorded use_pallas=True while real (ragged) model shapes quietly
+# ran the reference.  Every degradation now lands here: counted per op (so
+# benchmarks/plans can report effective dispatch coverage) and logged ONCE
+# per op (so a million-step run doesn't spam).
+# ---------------------------------------------------------------------------
+
+_FALLBACKS: dict = {}
+_FALLBACK_WARNED: set = set()
+
+
+def record_fallback(op: str, reason: str) -> None:
+    """Count (and log once per op) a fast-path dispatch degrade."""
+    _FALLBACKS[op] = _FALLBACKS.get(op, 0) + 1
+    if op not in _FALLBACK_WARNED:
+        _FALLBACK_WARNED.add(op)
+        _logger.warning(
+            "kernels.%s: fast path unavailable (%s) — dispatching to the "
+            "fallback implementation; further fallbacks counted silently "
+            "(kernels.fallback_counts())", op, reason)
+
+
+def fallback_counts() -> dict:
+    """Per-op count of fast-path dispatch degrades since the last clear."""
+    return dict(_FALLBACKS)
+
+
+def clear_fallbacks() -> None:
+    _FALLBACKS.clear()
+    _FALLBACK_WARNED.clear()
 
 
 @functools.lru_cache(maxsize=None)

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: fused transmit-side encode — split + stats + pack.
+
+The paper's §3.2 Step 1 does the float split and the entropy-coder feed in
+ONE kernel so the input tensor is read from HBM once and only wire-format
+bytes are written back.  The unfused TPU composition
+(``codec.split_planes`` -> ``packing.pack_exponents`` /
+``packing.bitplane_pack``) instead materializes the exponent plane and the
+lo plane in HBM between the split and the pack — a write + re-read of
+~``(1 + itemsize)`` bytes per element that this kernel eliminates.
+
+One grid step reads a ``(TILE_B, block)`` float tile and emits, per tile:
+  * the packed exponent payload — ``width`` uint32 bit-planes per group of
+    32 residuals, the exact layout of ``packing.bitplane_pack``;
+  * the packed lo planes (sign relocated next to the mantissa,
+    ``codec.split_planes`` layout, ``lo_bits`` planes);
+  * per-block ``base`` (min NONZERO exponent; 1 for all-zero blocks) and
+    ``rng`` (max residual code value) — the localized statistic of
+    ``packing.pack_exponents``'s zero-escape wire format.
+
+Exception blocks (``rng >= 2**width``) carry clamped payload exactly like
+``pack_exponents`` and are patched by the caller (``kernels/ops``) from a
+re-read of ONLY the exception rows (<= ``exc_frac`` of the input) — the
+bulk stays one-pass.
+
+The residual/pack algebra is pure VPU bit arithmetic; per-block stats are
+cross-lane min/max reductions (natively supported).  The in-kernel
+``reshape`` from ``(TILE_B, block)`` to ``(TILE_B * block/32, 32)`` groups
+is contiguity-preserving (row-major, last dim folds by whole multiples), the
+same shape family the bitpack kernel streams.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import codec
+from repro.core.packing import GROUP
+
+TILE_B = 8  # blocks per grid step (matches plane_split.py)
+
+
+def _encode_kernel(lay: codec.FloatLayout, width: int, x_ref, pay_ref, lo_ref,
+                   base_ref, rng_ref):
+    u = lay.uint_dtype
+    bits = jax.lax.bitcast_convert_type(x_ref[...], u)  # (TILE_B, block)
+    exp = ((bits >> u(lay.mant_bits)) & u((1 << lay.exp_bits) - 1)).astype(
+        jnp.uint32
+    )
+    sign = bits >> u(lay.total_bits - 1)
+    lo = ((sign << u(lay.mant_bits)) | (bits & u((1 << lay.mant_bits) - 1))
+          ).astype(jnp.uint32)
+
+    # zero-escape stats (wire format of packing.pack_exponents): base is the
+    # min NONZERO exponent (1 when the block is all-zero), rng the max code
+    # value ``max_nz - base + 1`` (0 when all-zero: 0 - 1 + 1 wraps to 0).
+    nz = exp != 0
+    base = jnp.min(jnp.where(nz, exp, jnp.uint32(255)), axis=-1, keepdims=True)
+    base = jnp.where(jnp.any(nz, axis=-1, keepdims=True), base, jnp.uint32(1))
+    mx = jnp.max(jnp.where(nz, exp, jnp.uint32(0)), axis=-1, keepdims=True)
+    base_ref[...] = base
+    rng_ref[...] = mx - base + jnp.uint32(1)
+
+    # residuals: code 0 = exponent 0, code r>0 = exp - base + 1, clamped to
+    # width bits (exception blocks: payload is garbage, restored from the
+    # raw exception region by the caller — identical to pack_exponents)
+    resid = jnp.where(nz, exp - base + jnp.uint32(1), jnp.uint32(0))
+    resid = jnp.minimum(resid, jnp.uint32((1 << width) - 1))
+
+    pos = jax.lax.broadcasted_iota(jnp.uint32, (1, GROUP), 1)
+    g = resid.reshape(-1, GROUP)  # (TILE_B * block/32, 32)
+    for b in range(width):  # static unroll: W plane reductions
+        pay_ref[:, b] = jnp.sum(
+            ((g >> jnp.uint32(b)) & jnp.uint32(1)) << pos, axis=-1,
+            dtype=jnp.uint32,
+        )
+    gl = lo.reshape(-1, GROUP)
+    for b in range(lay.lo_bits):
+        lo_ref[:, b] = jnp.sum(
+            ((gl >> jnp.uint32(b)) & jnp.uint32(1)) << pos, axis=-1,
+            dtype=jnp.uint32,
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("width", "block", "interpret"))
+def encode_fused(x: jax.Array, width: int, block: int = 512,
+                 interpret: bool = True):
+    """x float (n,), n % (block*TILE_B) == 0, 1 <= width <= 32.
+
+    Returns (payload uint32 (n//32, width), lo_planes uint32 (n//32,
+    lo_bits), bases uint32 (n_blocks,), rng uint32 (n_blocks,)) — one HBM
+    pass over ``x``; bit-identical to ``kernels/ref.encode_fused`` (and
+    through it to the split_planes + pack_exponents composition).
+    """
+    lay = codec.layout_of(x.dtype)
+    n = x.shape[0]
+    assert n % (block * TILE_B) == 0, (n, block, TILE_B)
+    assert 1 <= width <= 32, width
+    nb = n // block
+    gpb = block // GROUP  # packed groups per block
+    n_g = n // GROUP
+    xb = x.reshape(nb, block)
+    pay, lo, base, rng = pl.pallas_call(
+        functools.partial(_encode_kernel, lay, width),
+        out_shape=(
+            jax.ShapeDtypeStruct((n_g, width), jnp.uint32),
+            jax.ShapeDtypeStruct((n_g, lay.lo_bits), jnp.uint32),
+            jax.ShapeDtypeStruct((nb, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((nb, 1), jnp.uint32),
+        ),
+        grid=(nb // TILE_B,),
+        in_specs=[pl.BlockSpec((TILE_B, block), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((TILE_B * gpb, width), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_B * gpb, lay.lo_bits), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_B, 1), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_B, 1), lambda i: (i, 0)),
+        ),
+        interpret=interpret,
+    )(xb)
+    return pay, lo, base.reshape(-1), rng.reshape(-1)

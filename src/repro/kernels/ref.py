@@ -26,6 +26,36 @@ def split_with_stats(x: jax.Array, block: int = 512):
     return exp.astype(jnp.uint32), lo.astype(jnp.uint32), base, rng
 
 
+# --- encode_fused ------------------------------------------------------------
+
+def encode_fused(x: jax.Array, width: int, block: int = 512):
+    """One-pass jnp oracle of the fused split+pack kernel.
+
+    x float (n,), n % block == 0.  Returns (payload uint32 (n//32, width),
+    lo_planes uint32 (n//32, lo_bits), bases uint32 (n_blocks,), rng uint32
+    (n_blocks,)).  ``payload``/``bases`` are bit-identical to
+    ``packing.pack_exponents``'s wire fields (zero-escape, clamped exception
+    payload), ``lo_planes`` to ``packing.bitplane_pack(lo, lo_bits)``, and
+    ``rng`` is the max residual code value (``rng < 2**width`` iff the block
+    is not an exception).  XLA fuses this single dataflow; the Pallas kernel
+    (kernels/encode_fused.py) is the explicit one-HBM-pass form.
+    """
+    lay = codec.layout_of(x.dtype)
+    assert x.shape[0] % block == 0, (x.shape, block)
+    exp, lo = codec.split_planes(x)
+    b = exp.reshape(-1, block).astype(jnp.uint32)
+    nz = b != 0
+    base = jnp.min(jnp.where(nz, b, jnp.uint32(255)), axis=-1)
+    base = jnp.where(jnp.any(nz, axis=-1), base, jnp.uint32(1))
+    mx = jnp.max(jnp.where(nz, b, jnp.uint32(0)), axis=-1)
+    rng = mx - base + jnp.uint32(1)  # wraps to 0 for all-zero blocks
+    resid = jnp.where(nz, b - base[:, None] + jnp.uint32(1), jnp.uint32(0))
+    resid = jnp.minimum(resid, jnp.uint32((1 << width) - 1))
+    payload = packing.bitplane_pack(resid.reshape(-1), width)
+    lo_planes = packing.bitplane_pack(lo.astype(jnp.uint32), lay.lo_bits)
+    return payload, lo_planes, base, rng
+
+
 # --- decode_reduce -----------------------------------------------------------
 
 def decode_reduce(payload, lo_planes, group_bases, acc, dtype_name: str, width: int):

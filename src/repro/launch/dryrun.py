@@ -207,6 +207,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
             "ratio": wire["ratio"],
             "decode_hbm_paid": wire["decode_hbm_paid"],
             "decode_hbm_eliminated": wire["decode_hbm_eliminated"],
+            "encode_hbm_paid": wire["encode_hbm_paid"],
+            "encode_hbm_eliminated": wire["encode_hbm_eliminated"],
             "by_name": {k: {"n": v["n"], "wire_bytes": v["wire_bytes"],
                             "ratio": v["ratio"]}
                         for k, v in wire["by_name"].items()},

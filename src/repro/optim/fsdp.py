@@ -105,13 +105,16 @@ def shard_tree_by_plan(plan_tree, tree, idx, n_dp: int):
 def _make_gather(axes: tuple, w_fwd: int, w_bwd: int, block: int,
                  exc_frac: float, compressed: bool,
                  local_shape: tuple = None, dtype_name: str = None,
-                 use_fused: bool = True):
+                 use_fused: bool = True, fused_encode: bool = True):
     """Factory: custom-vjp'd last-dim all-gather over manual ``axes``.
 
     The backward reduce-scatter of the cotangent uses the fused
-    decode+reduce receive when ``use_fused`` (policy.fused_decode_reduce).
-    ``local_shape``/``dtype_name`` are part of the cache key so the VJP can
-    reconstruct the shard without carrying non-JAX residuals."""
+    decode+reduce receive when ``use_fused`` (policy.fused_decode_reduce);
+    both wires encode through the fused one-pass split+pack when
+    ``fused_encode`` (policy.fused_encode, replayed from
+    ``BucketPlan.encode_fused``).  ``local_shape``/``dtype_name`` are part
+    of the cache key so the VJP can reconstruct the shard without carrying
+    non-JAX residuals."""
     local_shape = tuple(local_shape)
     dtype = jnp.dtype(dtype_name)
 
@@ -123,7 +126,8 @@ def _make_gather(axes: tuple, w_fwd: int, w_bwd: int, block: int,
         flat = local.reshape(-1)  # row-major: last dim minor
         if compressed:
             stacked, flag = all_gather_compressed(
-                flat, tuple(axes), width=w_fwd, block=block, exc_frac=exc_frac
+                flat, tuple(axes), width=w_fwd, block=block,
+                exc_frac=exc_frac, fused_encode=fused_encode,
             )
             stacked = stacked[:, : flat.shape[0]]
         else:
@@ -156,6 +160,7 @@ def _make_gather(axes: tuple, w_fwd: int, w_bwd: int, block: int,
             red, _ = reduce_scatter_compressed(
                 rows.reshape(-1).astype(dtype), tuple(axes), width=w_bwd,
                 block=block, exc_frac=exc_frac, use_fused=use_fused,
+                fused_encode=fused_encode,
             )
             red = red[:ln]
         else:

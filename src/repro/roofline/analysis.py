@@ -125,6 +125,7 @@ class Roofline:
     wire_bytes: float = 0.0  # packed bytes actually on compressed wires
     wire_raw_bytes: float = 0.0  # what those wires would move raw
     decode_hbm_eliminated: float = 0.0  # fused-receive HBM savings
+    encode_hbm_eliminated: float = 0.0  # fused-transmit (split+pack) savings
 
     @property
     def wire_ratio(self) -> float:
@@ -206,6 +207,7 @@ def analyze_cell(json_path: str, hlo_path: Optional[str] = None) -> Roofline:
         wire_bytes=float(wire.get("wire_bytes", 0) or 0),
         wire_raw_bytes=float(wire.get("raw_bytes", 0) or 0),
         decode_hbm_eliminated=float(wire.get("decode_hbm_eliminated", 0) or 0),
+        encode_hbm_eliminated=float(wire.get("encode_hbm_eliminated", 0) or 0),
     )
 
 
@@ -233,7 +235,9 @@ def summarize_wire_reports(reports) -> dict:
 
     def blank(name=None):
         d = {"n": 0, "raw_bytes": 0, "wire_bytes": 0,
-             "decode_hbm_paid": 0, "decode_hbm_eliminated": 0, "n_fused": 0}
+             "decode_hbm_paid": 0, "decode_hbm_eliminated": 0, "n_fused": 0,
+             "encode_hbm_paid": 0, "encode_hbm_eliminated": 0,
+             "n_encode_fused": 0}
         if name is not None:
             d["name"] = name
         return d
@@ -247,6 +251,10 @@ def summarize_wire_reports(reports) -> dict:
             key = "decode_hbm_eliminated" if r.fused else "decode_hbm_paid"
             d[key] += r.decode_hbm_bytes
             d["n_fused"] += int(r.fused)
+            ekey = ("encode_hbm_eliminated" if r.encode_fused
+                    else "encode_hbm_paid")
+            d[ekey] += r.encode_hbm_bytes
+            d["n_encode_fused"] += int(r.encode_fused)
     tot["ratio"] = tot["wire_bytes"] / max(tot["raw_bytes"], 1)
     for d in by_name.values():
         d["ratio"] = d["wire_bytes"] / max(d["raw_bytes"], 1)
@@ -274,12 +282,15 @@ MD_HEADER = ("| arch | shape | mesh | compute (ms) | memory (ms) | "
 def markdown_row_wire(r: Roofline) -> str:
     """Cell row with the MEASURED wire accounting (collective-emitted
     WireReports, recorded by the dry-run) next to the HLO-parsed collective
-    bytes — the two views of the same wires must tell one story."""
+    bytes — the two views of the same wires must tell one story.  The two
+    "HBM saved" columns are the fused-receive (decode+reduce) and
+    fused-transmit (split+pack) round-trips the cell eliminated."""
     if r.wire_raw_bytes:
         wire = (f"{r.wire_bytes/2**20:.1f} | {r.wire_ratio:.3f} | "
-                f"{r.decode_hbm_eliminated/2**20:.1f}")
+                f"{r.decode_hbm_eliminated/2**20:.1f} | "
+                f"{r.encode_hbm_eliminated/2**20:.1f}")
     else:
-        wire = "- | - | -"
+        wire = "- | - | - | -"
     return (f"| {r.arch} | {r.shape} | {r.mesh} | "
             f"{r.t_compute*1e3:.2f} | {r.t_memory*1e3:.2f} | "
             f"{r.t_collective*1e3:.2f} | {r.coll_bytes/2**20:.1f} | "
@@ -289,6 +300,6 @@ def markdown_row_wire(r: Roofline) -> str:
 
 MD_HEADER_WIRE = (
     "| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) | "
-    "HLO coll MiB | wire MiB | wire ratio | HBM saved MiB | bottleneck | "
-    "useful-FLOPs | roofline-frac |\n"
-    "|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+    "HLO coll MiB | wire MiB | wire ratio | dec HBM saved MiB | "
+    "enc HBM saved MiB | bottleneck | useful-FLOPs | roofline-frac |\n"
+    "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|")

@@ -60,7 +60,8 @@ def main():
                     wire_bytes=r.wire_bytes,
                     wire_raw_bytes=r.wire_raw_bytes,
                     wire_ratio=r.wire_ratio,
-                    decode_hbm_eliminated=r.decode_hbm_eliminated)
+                    decode_hbm_eliminated=r.decode_hbm_eliminated,
+                    encode_hbm_eliminated=r.encode_hbm_eliminated)
                for r in rows]
         with open(args.json_out, "w") as f:
             json.dump(out, f, indent=1)

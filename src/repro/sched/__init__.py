@@ -7,7 +7,8 @@ by a thin executor (executor.py) over the existing collective primitives.
 Planless entry points remain as thin wrappers; ``train/step.py``,
 ``optim/zero1.py`` and ``optim/fsdp.py`` are plan-driven.
 """
-from repro.sched.cache import PlanCache, cache_stats, default_cache
+from repro.sched.cache import (PlanCache, cache_stats, default_cache,
+                               load_plans, save_plans)
 from repro.sched.compile import (compile_all_gather_plan,
                                  compile_fsdp_gather_plan, compile_psum_plan,
                                  compile_reduce_scatter_plan,
@@ -22,6 +23,6 @@ __all__ = [
     "all_gather_with_plan", "cache_stats", "compile_all_gather_plan",
     "compile_fsdp_gather_plan", "compile_psum_plan",
     "compile_reduce_scatter_plan", "compile_zero1_plan", "default_cache",
-    "execute_psum", "gather_from_plan", "psum_with_plan",
-    "reduce_scatter_with_plan",
+    "execute_psum", "gather_from_plan", "load_plans", "psum_with_plan",
+    "reduce_scatter_with_plan", "save_plans",
 ]

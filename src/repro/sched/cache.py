@@ -14,6 +14,8 @@ Hit/miss counters are exposed for tests and ``benchmarks/fig_sched.py``
 from __future__ import annotations
 
 import dataclasses
+import os
+import pickle
 import threading
 from typing import Callable
 
@@ -68,6 +70,65 @@ class PlanCache:
         with self._lock:
             self._plans.clear()
             self.stats = CacheStats()
+
+
+# ---------------------------------------------------------------------------
+# Plan persistence (ROADMAP "Plan-cache persistence"): CommPlans are pure
+# hashable data — no arrays, no tracers — so a compiled schedule can be
+# serialized next to a checkpoint and reloaded after a restart, carrying
+# the decision work (bucketing, gating, eval_shape wire probes) across
+# processes.  Keys travel inside the plans (``CommPlan.key`` IS the cache
+# key it was compiled under), so the file is just a tuple of plans.
+# ---------------------------------------------------------------------------
+
+_PLANS_VERSION = 1
+
+
+def save_plans(path: str, cache: "PlanCache" = None) -> int:
+    """Serialize every plan in ``cache`` (default: the process cache) to
+    ``path`` (atomic: tmp + rename).  Returns the number saved."""
+    cache = default_cache() if cache is None else cache
+    with cache._lock:
+        plans = tuple(cache._plans.values())
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        pickle.dump({"version": _PLANS_VERSION, "plans": plans}, f)
+    os.replace(tmp, path)
+    return len(plans)
+
+
+def load_plans(path: str, cache: "PlanCache" = None, *,
+               validate_backend: bool = True) -> int:
+    """Load plans saved by :func:`save_plans` into ``cache`` (default: the
+    process cache), keyed by each plan's own compile key.
+
+    ``validate_backend`` (default) drops plans whose recorded kernel
+    dispatch disagrees with the CURRENT backend probe — a schedule compiled
+    on TPU must not replay compiled-Pallas dispatch on a CPU restart (the
+    key would never be looked up anyway, since ``probe_backend()`` is part
+    of every key; dropping keeps the cache free of dead entries).  Existing
+    entries are never clobbered, and loading counts as neither hit nor
+    miss.  Returns the number of plans inserted."""
+    from repro.sched.compile import probe_backend
+
+    with open(path, "rb") as f:
+        payload = pickle.load(f)
+    if payload.get("version") != _PLANS_VERSION:
+        raise ValueError(f"unsupported plan-cache version in {path}: "
+                         f"{payload.get('version')}")
+    cache = default_cache() if cache is None else cache
+    backend, use_pallas = probe_backend()
+    loaded = 0
+    with cache._lock:
+        for plan in payload["plans"]:
+            if validate_backend and (plan.backend, plan.use_pallas) != (
+                    backend, use_pallas):
+                continue
+            if plan.key not in cache._plans:
+                cache._plans[plan.key] = plan
+                loaded += 1
+    return loaded
 
 
 # The process-default cache: train/step, zero1, fsdp and the planless thin

@@ -128,7 +128,8 @@ def compile_psum_plan(tree, axis_name, *, policy, tensor_class: str = "gradient"
                                      exc_frac=exc)
             buckets.append(BucketPlan(
                 path=PATH_RING, width=width, block=block, exc_frac=exc,
-                fused=policy.fused_decode_reduce, chunk=chunk,
+                fused=policy.fused_decode_reduce,
+                encode_fused=policy.fused_encode, chunk=chunk,
                 wire_bytes=2 * (n_dev - 1) * hop,
                 raw_bytes=2 * (n_dev - 1) * chunk * itemsize,
                 probe=probe, **base))
@@ -140,7 +141,8 @@ def compile_psum_plan(tree, axis_name, *, policy, tensor_class: str = "gradient"
                                              block=block, exc_frac=exc)
         buckets.append(BucketPlan(
             path=PATH_TWO_SHOT, width=width, ag_width=ag_width, block=block,
-            exc_frac=exc, fused=policy.fused_decode_reduce, chunk=chunk,
+            exc_frac=exc, fused=policy.fused_decode_reduce,
+            encode_fused=policy.fused_encode, chunk=chunk,
             wire_bytes=rs_wire + ag_wire,
             raw_bytes=(padded + n_dev * chunk) * itemsize,
             probe=probe, **base))
@@ -208,7 +210,8 @@ def compile_reduce_scatter_plan(length: int, dtype_name: str, axis_name, *,
             dtype_name=dtype_name, members=members, length=length,
             path=PATH_COMPRESSED, width=width, block=block,
             exc_frac=policy.profile.exc_frac,
-            fused=policy.fused_decode_reduce, n_dev=n_dev, chunk=chunk,
+            fused=policy.fused_decode_reduce,
+            encode_fused=policy.fused_encode, n_dev=n_dev, chunk=chunk,
             wire_bytes=encoded_wire_bytes(
                 n_dev, chunk, dt, width=width, block=block,
                 exc_frac=policy.profile.exc_frac),
@@ -243,7 +246,8 @@ def compile_all_gather_plan(length: int, dtype_name: str, axis_name, *,
         bucket = BucketPlan(
             dtype_name=dtype_name, members=members, length=length,
             path=PATH_COMPRESSED, width=width, block=block,
-            exc_frac=policy.profile.exc_frac, fused=False, n_dev=n_dev,
+            exc_frac=policy.profile.exc_frac, fused=False,
+            encode_fused=policy.fused_encode, n_dev=n_dev,
             chunk=padded,
             wire_bytes=n_dev * encoded_wire_bytes(
                 1, padded, dt, width=width, block=block,
@@ -335,7 +339,8 @@ def compile_fsdp_gather_plan(local_shape: tuple, dtype_name: str, axis_name,
             dtype_name=dtype_name, members=members, length=length,
             path=PATH_COMPRESSED, width=w_bwd, ag_width=w_fwd, block=block,
             exc_frac=policy.profile.exc_frac,
-            fused=policy.fused_decode_reduce, n_dev=n_dev, chunk=rs_chunk,
+            fused=policy.fused_decode_reduce,
+            encode_fused=policy.fused_encode, n_dev=n_dev, chunk=rs_chunk,
             wire_bytes=(n_dev * encoded_wire_bytes(
                 1, ag_len, dt, width=w_fwd, block=block,
                 exc_frac=policy.profile.exc_frac)

@@ -55,6 +55,7 @@ def consolidate_reports(plan: CommPlan, caught) -> WireReport | None:
     if not caught:
         return None
     fused = any(r.fused and r.decode_hbm_bytes for r in caught)
+    encode_fused = any(r.encode_fused and r.encode_hbm_bytes for r in caught)
     return WireReport(
         name=f"plan:{plan.kind}",
         axis=str(plan.axis if len(plan.axis) > 1 else plan.axis[0]),
@@ -62,6 +63,8 @@ def consolidate_reports(plan: CommPlan, caught) -> WireReport | None:
         wire_bytes=sum(r.wire_bytes for r in caught),
         fused=fused,
         decode_hbm_bytes=sum(r.decode_hbm_bytes for r in caught),
+        encode_fused=encode_fused,
+        encode_hbm_bytes=sum(r.encode_hbm_bytes for r in caught),
     )
 
 
@@ -81,19 +84,21 @@ def _exec_reduce_scatter(b: BucketPlan, x, axis_name, use_pallas):
     if b.path == PATH_COMPRESSED:
         return reduce_scatter_compressed(
             x, axis_name, width=b.width, block=b.block, exc_frac=b.exc_frac,
-            use_fused=b.fused, use_pallas=use_pallas)
+            use_fused=b.fused, use_pallas=use_pallas,
+            fused_encode=b.encode_fused)
     from repro.optim.zero1 import _raw_reduce_scatter
 
     return _raw_reduce_scatter(x, axis_name, b.n_dev), jnp.int32(0)
 
 
-def _exec_all_gather(b: BucketPlan, y, axis_name):
+def _exec_all_gather(b: BucketPlan, y, axis_name, use_pallas=None):
     """One AG bucket.  Returns (stacked (n_dev, chunk) or raw-gathered,
     flag); the caller reshapes per its own layout (matching the planless
     call sites exactly)."""
     if b.path == PATH_COMPRESSED:
         return all_gather_compressed(
-            y, axis_name, width=b.width, block=b.block, exc_frac=b.exc_frac)
+            y, axis_name, width=b.width, block=b.block, exc_frac=b.exc_frac,
+            fused_encode=b.encode_fused, use_pallas=use_pallas)
     from repro.optim.zero1 import _raw_all_gather
 
     return _raw_all_gather(y, axis_name), jnp.int32(0)
@@ -109,14 +114,17 @@ def _exec_psum_bucket(b: BucketPlan, bucket, axis_name, use_pallas):
     if b.path == PATH_RING:
         return psum_compressed_ring(
             bucket, axis_name, width=b.width, block=b.block,
-            exc_frac=b.exc_frac, out_dtype=dt, use_fused=b.fused)
+            exc_frac=b.exc_frac, out_dtype=dt, use_fused=b.fused,
+            fused_encode=b.encode_fused, use_pallas=use_pallas)
     assert b.path == PATH_TWO_SHOT, b.path
     red, f1 = reduce_scatter_compressed(
         bucket, axis_name, width=b.width, block=b.block, exc_frac=b.exc_frac,
-        use_fused=b.fused, use_pallas=use_pallas)
+        use_fused=b.fused, use_pallas=use_pallas,
+        fused_encode=b.encode_fused)
     gath, f2 = all_gather_compressed(
         red.astype(dt), axis_name, width=b.ag_width, block=b.block,
-        exc_frac=b.exc_frac)
+        exc_frac=b.exc_frac, fused_encode=b.encode_fused,
+        use_pallas=use_pallas)
     out = gath.reshape(-1)[: b.length].astype(dt)
     return out, jnp.maximum(f1, f2)
 
@@ -218,7 +226,8 @@ def all_gather_with_plan(y, axis_name, *, policy=None,
                 int(np.prod(y.shape)), name, axis_name, policy=policy,
                 n_dev=n_dev, tensor_class=tensor_class, key=key))
     with capture_wire_reports() as caught:
-        out, flag = _exec_all_gather(plan.buckets[0], y, axis_name)
+        out, flag = _exec_all_gather(plan.buckets[0], y, axis_name,
+                                     plan.use_pallas)
     _emit(plan, caught)
     return out, flag
 
@@ -254,7 +263,7 @@ class Zero1Execution:
 
     def all_gather(self, i: int, shard):
         return _exec_all_gather(self.plan.buckets[i].ag, shard,
-                                self.axis_name)
+                                self.axis_name, self.plan.use_pallas)
 
 
 # ---------------------------------------------------------------------------
@@ -272,4 +281,5 @@ def gather_from_plan(plan: CommPlan):
     local_shape = b.members[0][1]
     return fsdp_lib._make_gather(
         plan.axis, b.ag_width, b.width, b.block, b.exc_frac,
-        b.path == PATH_COMPRESSED, local_shape, b.dtype_name, b.fused)
+        b.path == PATH_COMPRESSED, local_shape, b.dtype_name, b.fused,
+        b.encode_fused)

@@ -54,6 +54,11 @@ class BucketPlan:
     block: int = 512
     exc_frac: float = 0.02
     fused: bool = True  # fused decode+reduce receive
+    # fused one-pass split+pack transmit (paper §3.2 Step 1): the executor
+    # replays this through kernels/ops.encode_fused_chunks; False keeps the
+    # three-pass split-then-pack composition (A/B accounting knob, recorded
+    # from CompressionPolicy.fused_encode at compile time)
+    encode_fused: bool = True
     n_dev: int = 1
     chunk: int = 0  # per-device chunk length after padding
     wire_bytes: int = 0  # expected compressed wire bytes per execution
@@ -138,6 +143,8 @@ class CommPlan:
             "n_buckets": len(self.buckets),
             "n_raw_leaves": len(self.raw_leaf_ix),
             "paths": tuple(b.path for b in self._flat_buckets()),
+            "n_encode_fused": sum(1 for b in self._flat_buckets()
+                                  if b.compressed and b.encode_fused),
             "wire_bytes": self.wire_bytes,
             "raw_bytes": self.raw_bytes,
             "ratio": self.ratio,
@@ -158,6 +165,7 @@ def policy_fingerprint(policy, tensor_class: str = "gradient") -> tuple:
         tuple(policy.raw_axes),
         str(policy.allreduce_algorithm),
         bool(policy.fused_decode_reduce),
+        bool(policy.fused_encode),
         tuple(sorted(prof.widths.items())),
         int(prof.block),
         float(prof.exc_frac),

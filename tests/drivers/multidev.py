@@ -249,6 +249,33 @@ def _sched():
         and int(f2) == int(g2))
 
 
+# -- 4b2. fused transmit-side encode: knob + plan parity across 8 devices ------
+@section("enc_fused", ["enc_fused_bitexact", "enc_fused_plan_exact",
+                       "enc_fused_plan_recorded"])
+def _enc_fused():
+    from repro import sched
+    tree = {"w": jnp.asarray(rng.normal(0, 0.02, (1 << 15,)), jnp.bfloat16),
+            "b": jnp.asarray(rng.normal(0, 1, (4096,)), jnp.float32)}
+    pol_f = policy  # fused_encode=True default
+    pol_u = dataclasses.replace(policy, fused_encode=False)
+    sm = lambda f: jax.jit(jax.shard_map(
+        f, mesh=mesh1, in_specs=(P(),), out_specs=(P(), P()),
+        axis_names={"data"}, check_vma=False))
+    a, fa = sm(lambda t: tree_psum_compressed(t, "data", policy=pol_f))(tree)
+    b, fb = sm(lambda t: tree_psum_compressed(t, "data", policy=pol_u))(tree)
+    res["enc_fused_bitexact"] = (
+        all(bits_equal(a[k], b[k]) for k in tree)
+        and int(fa) == int(fb) == 0)
+    cache = sched.PlanCache()
+    c, fc = sm(lambda t: sched.psum_with_plan(t, "data", policy=pol_f,
+                                              cache=cache))(tree)
+    res["enc_fused_plan_exact"] = (
+        all(bits_equal(a[k], c[k]) for k in tree) and int(fc) == 0)
+    plan = next(iter(cache._plans.values()))
+    res["enc_fused_plan_recorded"] = all(
+        bk.encode_fused for bk in plan.buckets)
+
+
 # -- 4c. split_send fused reducing receiver across 8 devices -------------------
 @section("p2p_reduce", ["p2p_reduce_into_exact"])
 def _p2p_reduce():

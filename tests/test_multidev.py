@@ -104,6 +104,18 @@ def test_sched_reduce_scatter_exact():
     assert get("sched_rs_exact")
 
 
+def test_fused_encode_knob_bitexact():
+    """fused_encode on/off: bit-identical tree psum across 8 devices."""
+    assert get("enc_fused_bitexact")
+
+
+def test_fused_encode_plan_parity():
+    """psum_with_plan replays the recorded encode_fused flag bit-identically
+    to the planless fused-encode path on 8 devices."""
+    assert get("enc_fused_plan_exact")
+    assert get("enc_fused_plan_recorded")
+
+
 def test_split_send_reduce_into_exact():
     """Fused reducing receiver == decode-then-add == acc + ppermute(x),
     bit-for-bit, across 8 devices."""

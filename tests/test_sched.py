@@ -400,6 +400,76 @@ def test_probe_drives_plan_and_kernel_dispatch(monkeypatch):
 
 
 # ---------------------------------------------------------------------------
+# plan-cache persistence (ROADMAP open item): plans are pure data
+# ---------------------------------------------------------------------------
+
+def _filled_cache():
+    pol = CompressionPolicy(min_bytes=0)
+    cache = sched.PlanCache()
+    for seed, t in [(0, make_tree()), (1, {"w": make_tree()["w_bf16"]})]:
+        key = sched_compile.psum_plan_key(t, "data", pol, "gradient", 8)
+        cache.get_or_compile(key, lambda _t=t, _k=key: (
+            sched_compile.compile_psum_plan(_t, "data", policy=pol, n_dev=8,
+                                            key=_k)))
+    return cache, pol
+
+
+def test_save_load_plans_roundtrip(tmp_path):
+    """save_plans -> load_plans restores every plan under its original key
+    (equal schedules), without touching hit/miss counters."""
+    cache, pol = _filled_cache()
+    path = str(tmp_path / "plans.pkl")
+    assert sched.save_plans(path, cache) == 2
+    fresh = sched.PlanCache()
+    assert sched.load_plans(path, fresh) == 2
+    assert len(fresh) == 2
+    assert fresh.stats == sched.cache.CacheStats(hits=0, misses=0)
+    for key, plan in cache._plans.items():
+        assert key in fresh
+        assert fresh._plans[key] == plan
+    # a lookup with a LIVE key (fresh treedef) hits the loaded plan
+    key = sched_compile.psum_plan_key(make_tree(seed=9), "data", pol,
+                                      "gradient", 8)
+    got = fresh.get_or_compile(key, lambda: pytest.fail("must hit"))
+    assert got == cache._plans[key]
+    assert fresh.stats.hits == 1 and fresh.stats.misses == 0
+
+
+def test_load_plans_drops_stale_backend(tmp_path, monkeypatch):
+    """A plan compiled under a different backend probe is dropped on load
+    (its key could never be looked up; keep the cache free of dead
+    entries)."""
+    from repro import kernels
+    cache, _ = _filled_cache()
+    path = str(tmp_path / "plans.pkl")
+    sched.save_plans(path, cache)
+    monkeypatch.setenv("REPRO_USE_PALLAS",
+                       "0" if kernels.default_use_pallas() else "1")
+    kernels.probe_cache_clear()
+    try:
+        fresh = sched.PlanCache()
+        assert sched.load_plans(path, fresh) == 0
+        assert sched.load_plans(path, fresh, validate_backend=False) == 2
+    finally:
+        monkeypatch.delenv("REPRO_USE_PALLAS", raising=False)
+        kernels.probe_cache_clear()
+
+
+def test_checkpoint_manager_plan_hook(tmp_path):
+    """CheckpointManager.save_plans/restore_plans round-trip the plan cache
+    next to the checkpoints (missing file -> clean no-op)."""
+    from repro.checkpoint.manager import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path / "ckpt"))
+    assert mgr.restore_plans(sched.PlanCache()) == 0  # nothing saved yet
+    cache, _ = _filled_cache()
+    path = mgr.save_plans(cache)
+    assert path.startswith(str(tmp_path / "ckpt"))
+    fresh = sched.PlanCache()
+    assert mgr.restore_plans(fresh) == 2
+    assert set(fresh._plans) == set(cache._plans)
+
+
+# ---------------------------------------------------------------------------
 # benchmark smoke (CI/tooling gate: must stay fast)
 # ---------------------------------------------------------------------------
 
