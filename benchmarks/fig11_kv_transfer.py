@@ -3,12 +3,22 @@
 Paper (Qwen-7B-Chat, vLLM): UZIP cuts KV transfer latency up to 30.1%;
 at 7,680 input tokens the transfer is ~23% of end-to-end → ~10% e2e gain.
 
-We build a real KV cache from the smoke model's prefill, fuse its leaves
-into one message (serve/kv_transfer.pack_cache), and report raw vs
-compressed transfer times under the 50 GB/s link model, scaling the cache
-geometry to Qwen-7B (32L × 32H-GQA... bf16) analytically for the headline
-row."""
+Two sections:
+  1. transfer-latency table — a real KV cache from the smoke model's
+     prefill, leaves fused into one message (serve/kv_transfer.pack_cache),
+     raw vs compressed transfer under the 50 GB/s link model;
+  2. plan-cached serve loop — a PD-disaggregated ``ServeEngine`` admits a
+     stream of same-signature requests, so every KV shipment after the
+     first replays the cached kind-"kv" ``CommPlan`` (zero re-derived
+     decisions); the headline is the plan-cache hit rate, gated >= 90%.
+
+Usage:
+  python -m benchmarks.fig11_kv_transfer           # both sections
+  python -m benchmarks.fig11_kv_transfer --smoke   # plan-cached loop only
+"""
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +31,7 @@ from repro.p2p.engine import Compressor, WireModel
 from repro.serve.kv_transfer import pack_cache, unpack_cache
 
 
-def run():
+def run_transfer_table():
     cfg = configs.get_smoke("tinyllama_1_1b")
     params = transformer.init(jax.random.PRNGKey(0), cfg)
     eng = Compressor(codec_name="packed")
@@ -58,5 +68,63 @@ def run():
     return rows
 
 
+def run_plan_cached_loop(requests: int = 10, max_new: int = 2):
+    """PD-disaggregated serve loop with a kind-"kv" plan cache.
+
+    Every admission ships its prefilled cache across the prefill->decode
+    boundary; the cache signature is identical across requests, so the kv
+    CommPlan compiles once and every later shipment is a hit.  Returns the
+    plan-cache stats dict (hit_rate gated >= 0.9 by run())."""
+    from repro import sched
+    from repro.core.policy import CompressionPolicy
+    from repro.serve.engine import Request, ServeConfig, ServeEngine
+
+    cfg = configs.get_smoke("smollm_135m")
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    plan_cache = sched.PlanCache()
+    eng = ServeEngine(
+        cfg, params,
+        ServeConfig(batch_slots=2, max_len=64, prefill_chunk=16,
+                    pd_disaggregated=True),
+        kv_policy=CompressionPolicy(min_bytes=0), kv_plan_cache=plan_cache)
+    rng = np.random.default_rng(0)
+    for i in range(requests):
+        eng.submit(Request(rid=i,
+                           prompt=rng.integers(0, cfg.vocab, 16).astype(np.int32),
+                           max_new=max_new))
+    done = eng.run()
+    stats = plan_cache.stats
+    plan = next(iter(plan_cache._plans.values()))
+    s = plan.summary()
+    table("Fig. 11b — plan-cached PD serve loop (smollm smoke, kind-\"kv\" "
+          "CommPlan per admission)",
+          ["requests", "kv shipments", "plan compiles", "plan-cache hits",
+           "hit rate"],
+          [[len(done), stats.hits + stats.misses, stats.misses, stats.hits,
+            f"{stats.hit_rate*100:.0f}%"]])
+    print(f"  compiled kv plan: {s['n_buckets']} bucket(s) {s['paths']}, "
+          f"strategy={s['strategy']}, {s['n_raw_leaves']} raw leaves, "
+          f"expected wire {s['wire_bytes']/2**10:.1f} KiB / raw "
+          f"{s['raw_bytes']/2**10:.1f} KiB (ratio {s['ratio']:.3f})")
+    print(f"  the paper's decided-once schedule (§3.3) on the serve wire: "
+          f"{stats.misses} compile, {stats.hits} replays — per-transfer "
+          f"gating/width/bucketing work eliminated after admission 1")
+    return {"requests": len(done), "hits": stats.hits,
+            "misses": stats.misses, "hit_rate": stats.hit_rate, "plan": s}
+
+
+def run(smoke: bool = False):
+    rows = None if smoke else run_transfer_table()
+    loop = run_plan_cached_loop()
+    assert loop["hit_rate"] >= 0.9, (
+        f"kv plan-cache hit rate {loop['hit_rate']:.2f} < 0.9 — the serve "
+        f"loop is recompiling a signature-stable schedule")
+    return {"rows": rows, "plan_loop": loop}
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="plan-cached serve loop only (CI gate, <60 s)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

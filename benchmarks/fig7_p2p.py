@@ -4,7 +4,13 @@ Paper (2×p5en, EFA): gains grow with size; +52.9% at 1 GB (72.2 vs
 47.2 GB/s), approaching the Amdahl bound for a 0.64 ratio; modest at
 8–32 MB.  We reproduce the shape of the curve with the host P2P engine:
 measured split/encode times on CPU + the assignment's 50 GB/s link model.
-Compression ratio uses the paper's setup (bf16, uniform [-1,1] → ~0.64)."""
+Compression ratio uses the paper's setup (bf16, uniform [-1,1] → ~0.64).
+
+The "plan" column is the plan-cached variant: each size's schedule is a
+kind-"p2p" ``CommPlan`` (``sched.cached_p2p_plan``), and the host
+``Compressor`` consults its recorded width instead of probing
+``calibrate.choose_width`` per signature — a second sweep over the same
+sizes is 100% plan-cache hits (zero decisions re-derived)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -15,28 +21,57 @@ from repro.p2p.engine import CodecModel, Compressor, WireModel
 
 
 def run():
+    from repro import sched
+    from repro.core.policy import CompressionPolicy
+
     wire = WireModel(bandwidth=50e9)
     cm = CodecModel()  # paper-calibrated H200 codec rates
     eng = Compressor(codec_name="packed")
+    pol = CompressionPolicy(min_bytes=0)
+    plan_cache = sched.PlanCache()
     rows = []
-    for size_mb in [1, 4, 16, 64, 256]:
-        n = size_mb * (1 << 20) // 2
-        x = realistic_tensor("uniform", n, jnp.bfloat16, seed=size_mb)
-        msg = eng.encode(x, tensor_class="p2p")
-        rep = eng.transfer_times(msg, wire, codec_model=cm)
-        raw_gbps = msg.raw_bytes / rep["t_raw"] / 1e9
-        ss_gbps = msg.raw_bytes / rep["t_split_send"] / 1e9
-        rows.append([
-            f"{size_mb} MB", f"{rep['ratio']:.3f}",
-            f"{raw_gbps:.1f}", f"{ss_gbps:.1f}",
-            f"{(ss_gbps/raw_gbps-1)*100:+.1f}%",
-        ])
+    sizes = [1, 4, 16, 64, 256]
+    for sweep in range(2):  # sweep 2: same signatures -> all plan hits
+        for size_mb in sizes:
+            n = size_mb * (1 << 20) // 2
+            if sweep:  # second pass only exercises the cache: the key is
+                # (shape, dtype, ...) — no need to materialize the data
+                import jax
+                sched.cached_p2p_plan(
+                    jax.ShapeDtypeStruct((n,), jnp.bfloat16), "data",
+                    policy=pol, n_dev=2, tensor_class="p2p",
+                    cache=plan_cache)
+                continue
+            x = realistic_tensor("uniform", n, jnp.bfloat16, seed=size_mb)
+            plan = sched.cached_p2p_plan(x, "data", policy=pol, n_dev=2,
+                                         tensor_class="p2p",
+                                         cache=plan_cache)
+            msg = eng.encode(x, tensor_class="p2p")
+            rep = eng.transfer_times(msg, wire, codec_model=cm)
+            pmsg = eng.encode(x, tensor_class="p2p", plan=plan)
+            prep = eng.transfer_times(pmsg, wire, codec_model=cm)
+            raw_gbps = msg.raw_bytes / rep["t_raw"] / 1e9
+            ss_gbps = msg.raw_bytes / rep["t_split_send"] / 1e9
+            plan_gbps = pmsg.raw_bytes / prep["t_split_send"] / 1e9
+            rows.append([
+                f"{size_mb} MB", f"{rep['ratio']:.3f}",
+                f"{raw_gbps:.1f}", f"{ss_gbps:.1f}",
+                f"{(ss_gbps/raw_gbps-1)*100:+.1f}%",
+                f"{plan_gbps:.1f} (w={pmsg.width})",
+            ])
     table("Fig. 7a — P2P throughput: raw vs split-send (50 GB/s link model,"
           " H200-rate codec, measured ratios)",
-          ["tensor", "ratio", "raw GB/s", "uzip GB/s", "gain"], rows)
+          ["tensor", "ratio", "raw GB/s", "uzip GB/s", "gain",
+           "plan GB/s"], rows)
+    stats = plan_cache.stats
     print("  paper: +52.9% at 1 GB (EFA, ratio 0.64); gains grow with "
           "size.  Codec stage times: paper-calibrated H200 rates "
           "(CPU-measured rates are fig3's subject); ratios measured here.")
+    print(f"  plan-cached variant: widths read from kind-\"p2p\" CommPlans "
+          f"(no per-signature choose_width probe); plan cache: "
+          f"{stats.misses} compiles, {stats.hits} hits across 2 sweeps "
+          f"(hit rate {stats.hit_rate:.2f})")
+    assert stats.misses == len(sizes) and stats.hits == len(sizes)
     return rows
 
 

@@ -34,11 +34,14 @@ def main():
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
+    from repro import kernels
+
     failures = []
     for key, modname in MODULES:
         if only and key not in only:
             continue
         t0 = time.time()
+        before = kernels.fallback_counts()
         try:
             mod = importlib.import_module(modname)
             mod.run()
@@ -47,7 +50,18 @@ def main():
             failures.append(key)
             print(f"  [{key} FAILED]")
             traceback.print_exc()
-    print(f"\n{'ALL BENCHMARKS PASSED' if not failures else 'FAILED: ' + ', '.join(failures)}")
+        # Surface silent fast-path degrades (kernels.record_fallback): a
+        # benchmark that quietly ran reference fallbacks would otherwise
+        # report numbers for a dispatch it never exercised.
+        after = kernels.fallback_counts()
+        delta = {op: after[op] - before.get(op, 0)
+                 for op in after if after[op] != before.get(op, 0)}
+        if delta:
+            print(f"  [{key} kernel fast-path fallbacks: {delta}]")
+    total = kernels.fallback_counts()
+    print(f"\nkernel fast-path fallbacks (all benchmarks): "
+          f"{total if total else 'none'}")
+    print(f"{'ALL BENCHMARKS PASSED' if not failures else 'FAILED: ' + ', '.join(failures)}")
     sys.exit(1 if failures else 0)
 
 

@@ -22,6 +22,15 @@ accumulates the received tensor (gradient accumulation across pipeline
 stages), ``split_send`` streams the wire through the fused decode+reduce
 pass instead of the pure bit-merge decode — the P2P analogue of the
 two-shot's modified CopyReducePacks (paper §3.4).
+
+Plan-driven replay (paper §3.3 extended to P2P): everything ``p2p_send``
+decides per call — the policy gate, codec width, chunk grid, fused
+knobs — can be compiled ONCE into a kind-"p2p" ``CommPlan``
+(``sched/compile.compile_p2p_plan``) and replayed by
+``sched.p2p_send_with_plan`` through the same ``p2p_dispatch`` seam, so
+the plan-driven path is bit-identical to the planless one by
+construction.  Kind-"kv" plans replay the same strategies bucket-wise for
+KV-cache pytrees (``serve/kv_transfer.py``).
 """
 from __future__ import annotations
 
@@ -79,7 +88,9 @@ def split_send(
 ):
     """Split-send pipeline: lo plane transfers while exponents encode.
 
-    Returns (received tensor, overflow_flag).
+    Returns (received tensor, overflow_flag).  Lossless: the received
+    tensor is bit-identical to ``ppermute(x)``.  Replayed by kind-"p2p"/
+    "kv" CommPlans (strategy "split_send") with identical arguments.
 
     ``reduce_into`` is the FUSED RECEIVER for reducing consumers (gradient
     accumulation across pipeline stages): instead of the pure bit-merge
@@ -158,6 +169,8 @@ def encode_send(
 ):
     """Naive baseline (paper Fig. 4a): transmit only after FULL compression.
 
+    Lossless (bit-identical to ``ppermute(x)``); replayed by kind-"p2p"/
+    "kv" CommPlans (strategy "encode_send") with identical arguments.
     The ``optimization_barrier`` ties the lo-plane transfer to the encoded
     exponent payload, forcing the serialization the paper measures.  Since
     nothing ships early anyway, the encode itself routes through the fused
@@ -218,7 +231,8 @@ def chunked_pipeline_send(
 ):
     """Chunk-based pipelining baseline (paper Fig. 4b/c): C chunks, each
     fully encoded then sent, chained so chunk k+1's encode waits on chunk
-    k's send being issued.  The paper shows this LOSES on GPUs because
+    k's send being issued.  Lossless (bit-identical to ``ppermute(x)``);
+    replayed by kind-"p2p"/"kv" CommPlans (strategy "chunked").  The paper shows this LOSES on GPUs because
     compression latency is sub-linear in size (Property 1); on TPU the
     analogous cost is per-chunk kernel/collective overhead and worse
     VPU utilization at small block counts."""
@@ -252,31 +266,42 @@ def chunked_pipeline_send(
     return out, flag
 
 
-def p2p_send(
-    x: jax.Array, axis_name, perm, *, policy: CompressionPolicy,
-    tensor_class: str = "weight", strategy: str = "split_send",
-    reduce_into: jax.Array | None = None,
+def p2p_dispatch(
+    x: jax.Array, axis_name, perm, *, compressed: bool, width: int,
+    block: int = 512, exc_frac: float = 0.02,
+    strategy: str = "split_send", reduce_into: jax.Array | None = None,
+    fused: bool = True, encode_fused: bool = True,
+    use_pallas: bool | None = None,
 ):
-    """Policy-gated P2P entry point (RL weight sync, KV-cache transfer).
+    """Decision-free P2P dispatch: route ``x`` through one strategy with
+    every schedule choice (gate, width, fused knobs) supplied by the
+    caller.
+
+    BOTH entry points call this — ``p2p_send`` derives the arguments from
+    a ``CompressionPolicy`` per call, ``sched/executor.p2p_send_with_plan``
+    replays them from a compiled kind-"p2p"/"kv" ``CommPlan`` — so the
+    plan-driven and planless paths are bit-identical by construction (the
+    same primitives receive the same arguments).
 
     ``reduce_into``: reducing receiver — return ``reduce_into + received``
     in f32 instead of the received tensor (pipeline-stage gradient
     accumulation).  The split_send strategy fuses the add into the wire
-    decode (``policy.fused_decode_reduce``); other strategies and the raw
-    path decode-then-add (bit-identical)."""
-    if not policy.should_compress(x, axis_name, tensor_class=tensor_class):
+    decode when ``fused``; other strategies and the raw path
+    decode-then-add (bit-identical)."""
+    if not compressed:
         from repro.core.compressed_collectives import raw_ppermute
         got = raw_ppermute(x, axis_name, perm)
         if reduce_into is not None:
             got = (reduce_into.reshape(-1).astype(jnp.float32)
                    + got.reshape(-1).astype(jnp.float32)).reshape(x.shape)
         return got, jnp.int32(0)
-    kw = dict(width=policy.width_for(tensor_class),
-              block=policy.profile.block, exc_frac=policy.profile.exc_frac)
+    kw = dict(width=width, block=block, exc_frac=exc_frac)
     if strategy == "split_send":
         return split_send(x, axis_name, perm, reduce_into=reduce_into,
-                          use_fused=policy.fused_decode_reduce, **kw)
-    kw["fused_encode"] = policy.fused_encode
+                          use_fused=fused, use_pallas=use_pallas, **kw)
+    kw["fused_encode"] = encode_fused
+    if strategy == "encode_send":  # chunked takes no kernel-dispatch knob
+        kw["use_pallas"] = use_pallas
     fn = {"encode_send": encode_send, "chunked": chunked_pipeline_send}[strategy]
     if reduce_into is None:
         return fn(x, axis_name, perm, **kw)
@@ -295,3 +320,37 @@ def p2p_send(
     got = (reduce_into.reshape(-1).astype(jnp.float32)
            + got.reshape(-1).astype(jnp.float32)).reshape(x.shape)
     return got, flag
+
+
+def p2p_send(
+    x: jax.Array, axis_name, perm, *, policy: CompressionPolicy,
+    tensor_class: str = "weight", strategy: str = "split_send",
+    reduce_into: jax.Array | None = None, plan=None,
+):
+    """Policy-gated P2P entry point (RL weight sync, KV-cache transfer).
+
+    The planless reference: gate, width and fused knobs are re-derived
+    from ``policy`` on every call, then dispatched via ``p2p_dispatch``.
+    Passing a compiled kind-"p2p" ``CommPlan`` (``plan=``) replays the
+    recorded schedule instead (``sched/executor.execute_p2p``) —
+    bit-identical to the planless path for the policy the plan was
+    compiled from, since both routes call ``p2p_dispatch`` with the same
+    arguments.  Callers with a stable send signature should prefer
+    ``sched.p2p_send_with_plan``, which adds the keyed plan cache.
+
+    ``reduce_into``: reducing receiver — return ``reduce_into + received``
+    in f32 instead of the received tensor (pipeline-stage gradient
+    accumulation).  The split_send strategy fuses the add into the wire
+    decode (``policy.fused_decode_reduce``); other strategies and the raw
+    path decode-then-add (bit-identical)."""
+    if plan is not None:
+        from repro.sched.executor import execute_p2p
+        return execute_p2p(plan, x, axis_name, perm, reduce_into=reduce_into)
+    return p2p_dispatch(
+        x, axis_name, perm,
+        compressed=policy.should_compress(x, axis_name,
+                                          tensor_class=tensor_class),
+        width=policy.width_for(tensor_class), block=policy.profile.block,
+        exc_frac=policy.profile.exc_frac, strategy=strategy,
+        reduce_into=reduce_into, fused=policy.fused_decode_reduce,
+        encode_fused=policy.fused_encode)

@@ -140,7 +140,17 @@ class Compressor:
     # -- encode ----------------------------------------------------------------
 
     def encode(self, x, *, tensor_class: str = "weight",
-               reuse_table: bool = True) -> Message:
+               reuse_table: bool = True, plan=None) -> Message:
+        """Encode one tensor into a wire :class:`Message` (bit-exact
+        round-trip through :meth:`decode`).
+
+        Width selection for the packed codec, in priority order: the
+        compiled schedule (``plan`` — a kind-"p2p"/"kv" ``CommPlan`` whose
+        recorded per-dtype width is consulted instead of re-probing), the
+        per-(class, dtype) width cache, else a one-time
+        ``calibrate.choose_width`` probe on the live data.  A plan-driven
+        caller therefore pays zero per-call decision work — the paper's
+        decided-once schedule applied to the host pipeline."""
         orig_shape = tuple(jnp.asarray(x).shape)
         arr = jnp.asarray(x).reshape(-1)
         lay = codec.layout_of(arr.dtype)
@@ -173,7 +183,11 @@ class Compressor:
             t_encode = time.perf_counter() - t1
         else:
             wkey = (tensor_class, lay.name)
-            width = self._width_cache.get(wkey)
+            width = None
+            if plan is not None:  # decided-once schedule beats re-probing
+                width = plan.width_for_dtype(lay.name)
+            if width is None:
+                width = self._width_cache.get(wkey)
             if width is None:
                 width = choose_width(arr, block=self.block).width
                 self._width_cache[wkey] = width

@@ -1,28 +1,41 @@
-"""Persistent collective runtime (paper §3.3, Uzip-NCCL on TPU/XLA terms).
+"""Persistent communication runtime (paper §3.3, Uzip-NCCL on TPU/XLA terms).
 
-The schedule of every compressed collective — dtype buckets, chunk grids,
-codec widths, fused receive, backend dispatch — is compiled ONCE into a
+The schedule of every compressed wire — dtype buckets, chunk grids, codec
+widths, fused receive, backend dispatch — is compiled ONCE into a
 ``CommPlan`` (plan.py), cached per step signature (cache.py), and replayed
-by a thin executor (executor.py) over the existing collective primitives.
-Planless entry points remain as thin wrappers; ``train/step.py``,
-``optim/zero1.py`` and ``optim/fsdp.py`` are plan-driven.
+by a thin executor (executor.py) over the existing primitives.  The IR
+covers collectives (kinds psum / reduce_scatter / all_gather / zero1 /
+fsdp_gather), point-to-point sends (kind p2p) and serve-side KV-cache
+shipments (kind kv); ``compile.PLAN_KINDS`` is the authoritative registry
+(documented and cross-checked in docs/ARCHITECTURE.md).  Planless entry
+points remain as references; ``train/step.py``, ``optim/zero1.py``,
+``optim/fsdp.py`` and the serve engine are plan-driven.
 """
 from repro.sched.cache import (PlanCache, cache_stats, default_cache,
                                load_plans, save_plans)
-from repro.sched.compile import (compile_all_gather_plan,
-                                 compile_fsdp_gather_plan, compile_psum_plan,
+from repro.sched.compile import (PLAN_KINDS, cached_fsdp_gather_plan,
+                                 cached_kv_plan, cached_p2p_plan,
+                                 cached_zero1_plan, compile_all_gather_plan,
+                                 compile_fsdp_gather_plan, compile_kv_plan,
+                                 compile_p2p_plan, compile_psum_plan,
                                  compile_reduce_scatter_plan,
                                  compile_zero1_plan)
 from repro.sched.executor import (Zero1Execution, all_gather_with_plan,
+                                  execute_kv_transfer, execute_p2p,
                                   execute_psum, gather_from_plan,
-                                  psum_with_plan, reduce_scatter_with_plan)
+                                  p2p_send_with_plan, psum_with_plan,
+                                  reduce_scatter_with_plan,
+                                  transfer_cache_with_plan)
 from repro.sched.plan import BucketPlan, CommPlan, PhasePair
 
 __all__ = [
-    "BucketPlan", "CommPlan", "PhasePair", "PlanCache", "Zero1Execution",
-    "all_gather_with_plan", "cache_stats", "compile_all_gather_plan",
-    "compile_fsdp_gather_plan", "compile_psum_plan",
-    "compile_reduce_scatter_plan", "compile_zero1_plan", "default_cache",
-    "execute_psum", "gather_from_plan", "load_plans", "psum_with_plan",
-    "reduce_scatter_with_plan", "save_plans",
+    "BucketPlan", "CommPlan", "PLAN_KINDS", "PhasePair", "PlanCache",
+    "Zero1Execution", "all_gather_with_plan", "cache_stats",
+    "cached_fsdp_gather_plan", "cached_kv_plan", "cached_p2p_plan",
+    "cached_zero1_plan", "compile_all_gather_plan",
+    "compile_fsdp_gather_plan", "compile_kv_plan", "compile_p2p_plan",
+    "compile_psum_plan", "compile_reduce_scatter_plan", "compile_zero1_plan",
+    "default_cache", "execute_kv_transfer", "execute_p2p", "execute_psum",
+    "gather_from_plan", "load_plans", "p2p_send_with_plan", "psum_with_plan",
+    "reduce_scatter_with_plan", "save_plans", "transfer_cache_with_plan",
 ]

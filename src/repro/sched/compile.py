@@ -1,12 +1,16 @@
 """CommPlan compiler: pytree spec + CompressionPolicy + axis -> schedule.
 
-Everything ``tree_psum_compressed`` / ``zero1_step`` / the FSDP gathers
-decide per call — dtype bucketing, compress-vs-raw gating, widths, chunk
-grids, fused receive, backend dispatch — is decided HERE, once, from
-abstract shapes.  The executor then replays the recorded schedule against
-the existing collective primitives, so plan-driven and planless paths are
-bit-identical by construction (same primitives, same arguments, same
-order).
+Everything ``tree_psum_compressed`` / ``zero1_step`` / the FSDP gathers /
+``p2p_send`` / ``transfer_cache`` decide per call — dtype bucketing,
+compress-vs-raw gating, widths, chunk grids, fused receive, backend
+dispatch — is decided HERE, once, from abstract shapes.  The executor then
+replays the recorded schedule against the existing collective / P2P
+primitives, so plan-driven and planless paths are bit-identical by
+construction (same primitives, same arguments, same order).
+
+``PLAN_KINDS`` (bottom of this module) is the authoritative registry of
+every plan kind and its compiler; ``docs/ARCHITECTURE.md`` documents the
+same table and a tier-1 test cross-checks the two.
 
 Expected wire bytes are derived by ``jax.eval_shape`` over the real
 encoder (``_encode_chunks``): the wire format's static shape arithmetic is
@@ -361,6 +365,177 @@ def fsdp_gather_plan_key(local_shape, dtype_name, axis_name, policy,
 
 
 # ---------------------------------------------------------------------------
+# P2P: the split-send pipeline compiled into the IR (paper §3.2) — what
+# ``p2p_send`` re-decides per call (gate, width, chunking, fused flags)
+# recorded once per (shape, dtype, strategy, policy) signature
+# ---------------------------------------------------------------------------
+
+P2P_STRATEGIES = ("split_send", "encode_send", "chunked")
+_P2P_PIPELINE_CHUNKS = 4  # chunked_pipeline_send's default chunk count
+
+
+def p2p_wire_bytes(n_padded: int, dtype, *, width: int, block: int,
+                   exc_frac: float) -> int:
+    """Static wire size of ONE P2P message of ``n_padded`` (block-padded)
+    elements: eval_shape over the real split+pack composition, so this IS
+    the wire the strategies ship (packed lo plane + exponent wire incl.
+    the overflow scalar — exactly what ``split_send._record_p2p`` sums)."""
+    from repro.core import packing
+
+    lay = codec.layout_of(dtype)
+
+    def enc(xf):
+        exp, lo = codec.split_planes(xf)
+        lo_planes = packing.bitplane_pack(
+            packing._pad_to(lo.astype(jnp.uint32), packing.GROUP, "zero"),
+            lay.lo_bits)
+        pk = packing.pack_exponents(exp, width=width, block=block,
+                                    exc_frac=exc_frac)
+        return {"lo": lo_planes, "payload": pk.payload, "bases": pk.bases,
+                "exc_idx": pk.exc_idx, "exc_raw": pk.exc_raw,
+                "overflow": pk.overflow}
+
+    wire = jax.eval_shape(enc,
+                          jax.ShapeDtypeStruct((n_padded,), jnp.dtype(dtype)))
+    return sum(int(np.prod(v.shape)) * jnp.dtype(v.dtype).itemsize
+               for v in wire.values())
+
+
+def _p2p_bucket(length: int, dtype_name: str, axis_name, *, policy,
+                n_dev: int, tensor_class: str, strategy: str) -> BucketPlan:
+    """One flat P2P message's schedule: ``p2p_send``'s gate + width choice
+    + the strategy's chunk grid, recorded as a BucketPlan.  ``chunk`` is
+    the block-padded length of one send ("chunked": one pipeline chunk)."""
+    # gate BEFORE any layout lookup: codec-unsupported dtypes (int32, f64)
+    # must compile to the raw path exactly like p2p_send routes them
+    dt = jnp.dtype(dtype_name)
+    itemsize = dt.itemsize
+    members = ((0, (length,), length),)
+    struct = jax.ShapeDtypeStruct((length,), dt)
+    base = dict(dtype_name=dtype_name, members=members, length=length,
+                n_dev=n_dev)
+    if not policy.should_compress(struct, axis_name,
+                                  tensor_class=tensor_class):
+        return BucketPlan(path=PATH_RAW, raw_bytes=length * itemsize, **base)
+    dt = codec.LAYOUTS[dtype_name].dtype
+    width = policy.width_for(tensor_class)
+    block = policy.profile.block
+    exc = policy.profile.exc_frac
+    # split_send ALWAYS pays the split-plane round-trip (the early lo-plane
+    # transfer requires the materialized split); the other strategies fuse
+    # the encode per the policy knob.
+    encode_fused = policy.fused_encode and strategy != "split_send"
+    if strategy == "chunked":
+        # chunked_pipeline_send's degenerate-chunk guard: derive the
+        # per-chunk length first, then the effective chunk count.
+        ideal = -(-length // _P2P_PIPELINE_CHUNKS)
+        per = _pad_up(ideal, block)
+        n_chunks = -(-length // per)
+        wire = n_chunks * p2p_wire_bytes(per, dt, width=width, block=block,
+                                         exc_frac=exc)
+        return BucketPlan(path=PATH_COMPRESSED, width=width, block=block,
+                          exc_frac=exc, fused=policy.fused_decode_reduce,
+                          encode_fused=encode_fused, chunk=per,
+                          wire_bytes=wire,
+                          raw_bytes=n_chunks * per * itemsize, **base)
+    padded = _pad_up(length, block)
+    return BucketPlan(path=PATH_COMPRESSED, width=width, block=block,
+                      exc_frac=exc, fused=policy.fused_decode_reduce,
+                      encode_fused=encode_fused, chunk=padded,
+                      wire_bytes=p2p_wire_bytes(padded, dt, width=width,
+                                                block=block, exc_frac=exc),
+                      raw_bytes=padded * itemsize, **base)
+
+
+def compile_p2p_plan(x, axis_name, *, policy, n_dev: int,
+                     tensor_class: str = "weight",
+                     strategy: str = "split_send",
+                     key: tuple = None) -> CommPlan:
+    """Compile the schedule of one P2P send (kind "p2p").
+
+    Mirrors ``core/split_send.p2p_send``'s dispatch bit-for-bit: the same
+    policy gate, width, block and fused knobs, decided once from the
+    abstract (shape, dtype) instead of per call.  ``x`` may be an array or
+    a ShapeDtypeStruct.  The executor replays it through the identical
+    strategy primitives (``sched/executor.p2p_send_with_plan``)."""
+    if strategy not in P2P_STRATEGIES:
+        raise ValueError(f"unknown P2P strategy {strategy!r}")
+    backend, use_pallas = probe_backend()
+    axis = axis_tuple(axis_name)
+    shape = tuple(x.shape)
+    dtype_name = jnp.dtype(x.dtype).name
+    length = int(np.prod(shape))
+    if key is None:
+        key = p2p_plan_key(shape, dtype_name, axis_name, policy,
+                           tensor_class, strategy, n_dev)
+    bucket = _p2p_bucket(length, dtype_name, axis_name, policy=policy,
+                         n_dev=n_dev, tensor_class=tensor_class,
+                         strategy=strategy)
+    bucket = _with_members(bucket, ((0, shape, length),))
+    return CommPlan(key=key, kind="p2p", axis=axis, n_dev=n_dev,
+                    backend=backend, use_pallas=use_pallas,
+                    buckets=(bucket,), n_leaves=1, strategy=strategy)
+
+
+def p2p_plan_key(shape, dtype_name, axis_name, policy, tensor_class: str,
+                 strategy: str, n_dev: int) -> tuple:
+    return ("p2p", (tuple(shape), str(dtype_name)), str(strategy),
+            axis_tuple(axis_name), int(n_dev),
+            policy_fingerprint(policy, tensor_class), probe_backend())
+
+
+# ---------------------------------------------------------------------------
+# serve KV: the cache-pytree shipment compiled into the IR (paper §5.3.2) —
+# per-dtype bucket plans from serve/kv_transfer's leaf bucketing
+# ---------------------------------------------------------------------------
+
+def compile_kv_plan(cache, axis_name, *, policy, n_dev: int,
+                    strategy: str = "split_send",
+                    key: tuple = None) -> CommPlan:
+    """Compile a KV-cache transfer schedule (kind "kv").
+
+    Mirrors ``serve/kv_transfer.transfer_cache`` bit-for-bit: leaves are
+    split with its ``_bucket_leaves`` rule, compressible leaves fuse into
+    one flat message per dtype (in first-seen leaf order — the planless
+    grouping order), each gated/sized like a ``p2p_send`` of the
+    concatenated bucket at tensor_class "activation".  ``cache`` may hold
+    arrays or ShapeDtypeStructs.  The executor replays it through the
+    identical wire primitives (``sched/executor.transfer_cache_with_plan``);
+    a decode loop with a signature-stable cache hits the plan cache on
+    every transfer after the first."""
+    from repro.serve.kv_transfer import _bucket_leaves
+
+    if strategy not in P2P_STRATEGIES:
+        raise ValueError(f"unknown P2P strategy {strategy!r}")
+    backend, use_pallas = probe_backend()
+    axis = axis_tuple(axis_name)
+    leaves, comp, raw = _bucket_leaves(cache)
+    groups: dict = {}
+    for i in comp:
+        groups.setdefault(jnp.dtype(leaves[i].dtype).name, []).append(i)
+    buckets = []
+    for name, idxs in groups.items():
+        members = tuple((i, tuple(leaves[i].shape),
+                         int(np.prod(leaves[i].shape))) for i in idxs)
+        L = sum(m[2] for m in members)
+        bucket = _p2p_bucket(L, name, axis_name, policy=policy, n_dev=n_dev,
+                             tensor_class="activation", strategy=strategy)
+        buckets.append(_with_members(bucket, members))
+    if key is None:
+        key = kv_plan_key(cache, axis_name, policy, strategy, n_dev)
+    return CommPlan(key=key, kind="kv", axis=axis, n_dev=n_dev,
+                    backend=backend, use_pallas=use_pallas,
+                    buckets=tuple(buckets), raw_leaf_ix=tuple(raw),
+                    n_leaves=len(leaves), strategy=strategy)
+
+
+def kv_plan_key(cache, axis_name, policy, strategy: str, n_dev: int) -> tuple:
+    return ("kv", tree_signature(cache), str(strategy),
+            axis_tuple(axis_name), int(n_dev),
+            policy_fingerprint(policy, "activation"), probe_backend())
+
+
+# ---------------------------------------------------------------------------
 # cached compile helpers (the step builders' entry points)
 # ---------------------------------------------------------------------------
 
@@ -386,3 +561,51 @@ def cached_fsdp_gather_plan(local_shape, dtype_name, axis_name, *, policy,
         key, lambda: compile_fsdp_gather_plan(
             tuple(local_shape), dtype_name, axis_name, policy=policy,
             n_dev=n_dev, key=key))
+
+
+def cached_p2p_plan(x, axis_name, *, policy, n_dev: int,
+                    tensor_class: str = "weight",
+                    strategy: str = "split_send", cache=None):
+    from repro.sched.cache import default_cache
+
+    cache = default_cache() if cache is None else cache
+    key = p2p_plan_key(tuple(x.shape), jnp.dtype(x.dtype).name, axis_name,
+                       policy, tensor_class, strategy, n_dev)
+    return cache.get_or_compile(
+        key, lambda: compile_p2p_plan(
+            x, axis_name, policy=policy, n_dev=n_dev,
+            tensor_class=tensor_class, strategy=strategy, key=key))
+
+
+def cached_kv_plan(cache, axis_name, *, policy, n_dev: int,
+                   strategy: str = "split_send", plan_cache=None):
+    """Keyed-cache wrapper for :func:`compile_kv_plan` — the serve engine's
+    entry point (``plan_cache`` defaults to the process cache, so repeated
+    transfers of a signature-stable cache skip recompilation; a restarted
+    engine reloads via ``sched.cache.load_plans`` and hits immediately)."""
+    from repro.sched.cache import default_cache
+
+    plan_cache = default_cache() if plan_cache is None else plan_cache
+    key = kv_plan_key(cache, axis_name, policy, strategy, n_dev)
+    return plan_cache.get_or_compile(
+        key, lambda: compile_kv_plan(
+            cache, axis_name, policy=policy, n_dev=n_dev, strategy=strategy,
+            key=key))
+
+
+# ---------------------------------------------------------------------------
+# kind registry: CommPlan.kind -> compiler.  docs/ARCHITECTURE.md documents
+# this table and tests/test_docs.py cross-checks the two, so the doc cannot
+# silently rot.  New wire features register here instead of growing their
+# own per-call decision logic (ROADMAP plan-IR unification).
+# ---------------------------------------------------------------------------
+
+PLAN_KINDS = {
+    "psum": compile_psum_plan,
+    "reduce_scatter": compile_reduce_scatter_plan,
+    "all_gather": compile_all_gather_plan,
+    "zero1": compile_zero1_plan,
+    "fsdp_gather": compile_fsdp_gather_plan,
+    "p2p": compile_p2p_plan,
+    "kv": compile_kv_plan,
+}

@@ -21,6 +21,10 @@ Entry points:
   * ``all_gather_with_plan``      — flat local shard -> stacked full
   * ``execute_zero1_pairs``       — ZeRO-1 phase driver (optim/zero1.py)
   * ``gather_from_plan``          — FSDP custom-vjp gather (optim/fsdp.py)
+  * ``p2p_send_with_plan``        — split-send P2P pipeline (the plan twin
+    of ``core/split_send.p2p_send``, kind "p2p")
+  * ``transfer_cache_with_plan``  — KV-cache pytree shipment (the plan
+    twin of ``serve/kv_transfer.transfer_cache``, kind "kv")
 """
 from __future__ import annotations
 
@@ -264,6 +268,144 @@ class Zero1Execution:
     def all_gather(self, i: int, shard):
         return _exec_all_gather(self.plan.buckets[i].ag, shard,
                                 self.axis_name, self.plan.use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# P2P + serve KV wires (kinds "p2p"/"kv")
+# ---------------------------------------------------------------------------
+
+def _exec_p2p_bucket(b: BucketPlan, x, axis_name, perm, *, strategy,
+                     use_pallas, reduce_into=None):
+    """One P2P message from its BucketPlan: the exact dispatch of
+    ``p2p_send``, with the gate/width/fused decisions read off the plan
+    (``core/split_send.p2p_dispatch`` is the shared seam — bit-identical
+    to the planless call by construction).  ``use_pallas`` replays the
+    plan's recorded backend probe, same contract as the collective
+    kinds (the key invalidates on probe changes, so it equals a live
+    probe for any plan the cache hands out)."""
+    from repro.core.split_send import p2p_dispatch
+
+    return p2p_dispatch(
+        x, axis_name, perm, compressed=b.path == PATH_COMPRESSED,
+        width=b.width, block=b.block, exc_frac=b.exc_frac,
+        strategy=strategy, reduce_into=reduce_into, fused=b.fused,
+        encode_fused=b.encode_fused, use_pallas=use_pallas)
+
+
+def execute_p2p(plan: CommPlan, x, axis_name, perm, *, reduce_into=None):
+    """Run a compiled kind-"p2p" plan on a concrete tensor.
+
+    Bit-identical to ``p2p_send(x, axis_name, perm, policy=...)`` for the
+    (policy, tensor_class, strategy) the plan was compiled from.  Returns
+    (received tensor, flag) — or (reduce_into + received, flag) for a
+    reducing receiver.  Emits ONE consolidated ``plan:p2p`` WireReport."""
+    assert plan.kind == "p2p", plan.kind
+    _, shape, _ = plan.buckets[0].members[0]
+    assert tuple(x.shape) == tuple(shape) and \
+        jnp.dtype(x.dtype).name == plan.buckets[0].dtype_name, (
+            f"tensor {x.shape}/{jnp.dtype(x.dtype).name} does not match the "
+            f"plan's signature {shape}/{plan.buckets[0].dtype_name}")
+    with capture_wire_reports() as caught:
+        out, flag = _exec_p2p_bucket(plan.buckets[0], x, axis_name, perm,
+                                     strategy=plan.strategy,
+                                     use_pallas=plan.use_pallas,
+                                     reduce_into=reduce_into)
+    _emit(plan, caught)
+    return out, flag
+
+
+def p2p_send_with_plan(x, axis_name, perm, *, policy=None,
+                       tensor_class: str = "weight",
+                       strategy: str = "split_send", reduce_into=None,
+                       plan: CommPlan = None, cache: PlanCache = None):
+    """Plan-driven P2P send (the cached thin wrapper over ``execute_p2p``).
+
+    With ``plan=None`` the plan is looked up by (shape, dtype, strategy,
+    axis, n_dev, policy fingerprint) in the keyed cache and compiled on
+    first sight — a repeated send signature replays the cached schedule
+    with zero re-derivation.  Bit-identical to the planless ``p2p_send``."""
+    if plan is None:
+        assert policy is not None, "p2p_send_with_plan needs policy= or plan="
+        n_dev = _axis_size(axis_name)
+        cache = default_cache() if cache is None else cache
+        key = sched_compile.p2p_plan_key(
+            tuple(x.shape), jnp.dtype(x.dtype).name, axis_name, policy,
+            tensor_class, strategy, n_dev)
+        plan = cache.get_or_compile(
+            key, lambda: sched_compile.compile_p2p_plan(
+                x, axis_name, policy=policy, n_dev=n_dev,
+                tensor_class=tensor_class, strategy=strategy, key=key))
+    return execute_p2p(plan, x, axis_name, perm, reduce_into=reduce_into)
+
+
+def execute_kv_transfer(plan: CommPlan, cache, axis_name, perm):
+    """Run a compiled kind-"kv" plan on a concrete KV-cache pytree.
+
+    Bit-identical to ``transfer_cache(cache, axis_name, perm, policy=...)``
+    for the (policy, strategy) the plan was compiled from: the recorded
+    per-dtype buckets concatenate the same leaves in the same order and
+    ride the same wire primitives; raw leaves ship with the same raw
+    ppermute.  Returns (cache_at_dest, flag) and emits ONE consolidated
+    ``plan:kv`` WireReport."""
+    from repro.core.compressed_collectives import raw_ppermute
+
+    assert plan.kind == "kv", plan.kind
+    leaves, treedef = jax.tree_util.tree_flatten(cache)
+    assert len(leaves) == plan.n_leaves, (len(leaves), plan.n_leaves)
+    for b in plan.buckets:  # a stale plan must fail loudly, not mis-scatter
+        for i, shape, _ in b.members:
+            assert tuple(leaves[i].shape) == tuple(shape) and \
+                jnp.dtype(leaves[i].dtype).name == b.dtype_name, (
+                    f"cache leaf {i} is {leaves[i].shape}/"
+                    f"{jnp.dtype(leaves[i].dtype).name} but the plan "
+                    f"recorded {shape}/{b.dtype_name}")
+    out = list(leaves)
+    flag = jnp.int32(0)
+    with capture_wire_reports() as caught:
+        for b in plan.buckets:
+            parts = [leaves[i].reshape(-1) for i, _, _ in b.members]
+            bucket = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+            got, f = _exec_p2p_bucket(b, bucket, axis_name, perm,
+                                      strategy=plan.strategy,
+                                      use_pallas=plan.use_pallas)
+            flag = jnp.maximum(flag, f)
+            offs = np.cumsum([0] + [m[2] for m in b.members])
+            for k, (i, shape, _) in enumerate(b.members):
+                out[i] = got[offs[k]: offs[k + 1]].reshape(shape)
+        for i in plan.raw_leaf_ix:
+            out[i] = raw_ppermute(
+                leaves[i][None] if leaves[i].ndim == 0 else leaves[i],
+                axis_name, perm)
+            if leaves[i].ndim == 0:
+                out[i] = out[i][0]
+    _emit(plan, caught)
+    return jax.tree_util.tree_unflatten(treedef, out), flag
+
+
+def transfer_cache_with_plan(cache, axis_name, perm, *, policy=None,
+                             strategy: str = "split_send",
+                             plan: CommPlan = None,
+                             plan_cache: PlanCache = None):
+    """Plan-driven KV-cache transfer (the cached thin wrapper over
+    ``execute_kv_transfer``).
+
+    With ``plan=None`` the plan is looked up by the cache pytree's
+    signature (treedef + per-leaf shape/dtype) in the keyed plan cache —
+    a serve decode loop whose cache signature is stable hits the cached
+    schedule on every transfer after the first (zero recompiles).
+    Bit-identical to the planless ``transfer_cache``."""
+    if plan is None:
+        assert policy is not None, \
+            "transfer_cache_with_plan needs policy= or plan="
+        n_dev = _axis_size(axis_name)
+        plan_cache = default_cache() if plan_cache is None else plan_cache
+        key = sched_compile.kv_plan_key(cache, axis_name, policy, strategy,
+                                        n_dev)
+        plan = plan_cache.get_or_compile(
+            key, lambda: sched_compile.compile_kv_plan(
+                cache, axis_name, policy=policy, n_dev=n_dev,
+                strategy=strategy, key=key))
+    return execute_kv_transfer(plan, cache, axis_name, perm)
 
 
 # ---------------------------------------------------------------------------

@@ -13,9 +13,19 @@ A plan is pure data (no arrays, no tracers): it is built by
 ``sched/compile.py`` from abstract shapes + a ``CompressionPolicy``,
 cached by ``sched/cache.py`` keyed on the step signature, and driven by
 ``sched/executor.py`` against the existing ``compressed_collectives`` /
-``kernels.ops`` primitives.  Later features (compiled-Pallas TPU dispatch,
-P2P plans, serve KV plans) plug into this IR rather than growing their own
-decision logic.
+``kernels.ops`` / ``core/split_send`` primitives.  The IR covers every
+wire the runtime moves: collectives (kinds ``psum`` / ``reduce_scatter``
+/ ``all_gather`` / ``zero1`` / ``fsdp_gather``), point-to-point sends
+(kind ``p2p`` — the split-send pipeline of paper §3.2), and serve-side
+KV-cache shipments (kind ``kv`` — the PD-disaggregation wire of §5.3.2).
+The full kind registry lives in ``sched/compile.PLAN_KINDS`` and is
+documented (and cross-checked by a tier-1 test) in
+``docs/ARCHITECTURE.md``.
+
+Parity contract: for every kind, the plan-driven execution is
+bit-identical to the planless entry point it replays — the executor calls
+the SAME primitives with the SAME arguments; only where the decisions are
+made differs (per-call re-derivation vs compiled-once replay).
 """
 from __future__ import annotations
 
@@ -40,7 +50,9 @@ class BucketPlan:
     ``(flat_leaf_index, shape, size)`` in tree order — the executor
     concatenates/scatters by these offsets.  ``chunk`` is the per-device
     chunk length of the reduce-scatter grid (``padded / n_dev``); the
-    all-gather phase reuses it.  ``wire_bytes``/``raw_bytes`` are the
+    all-gather phase reuses it.  For ``p2p``/``kv`` plans ``chunk`` is the
+    block-padded message length of one send (the per-pipeline-chunk length
+    for the "chunked" strategy).  ``wire_bytes``/``raw_bytes`` are the
     expected per-execution wire accounting (static — wire shapes do not
     depend on data), matching what the collectives' WireReports record.
     """
@@ -92,14 +104,20 @@ class CommPlan:
 
     ``kind``: "psum" (pytree two-shot all-reduce), "reduce_scatter",
     "all_gather" (flat single-bucket phases), "zero1" (per-dtype RS/AG
-    PhasePairs with the optimizer update between), or "fsdp_gather"
-    (custom-vjp weight gather / gradient RS of one leaf).
+    PhasePairs with the optimizer update between), "fsdp_gather"
+    (custom-vjp weight gather / gradient RS of one leaf), "p2p" (one
+    tensor over the split-send P2P pipeline — replays
+    ``core/split_send.p2p_send``), or "kv" (a KV-cache pytree shipped
+    leaf-bucketed over the P2P pipeline — replays
+    ``serve/kv_transfer.transfer_cache``).
 
     ``backend``/``use_pallas`` record the probed kernel dispatch at compile
     time (``repro.kernels.backend()``): a plan documents exactly which
     receive-path implementation it drives.  ``raw_leaf_ix`` are pytree
-    leaves outside every bucket (unsupported dtypes) synced with a plain
-    safe psum."""
+    leaves outside every bucket (unsupported dtypes): synced with a plain
+    safe psum (kind "psum") or moved with a raw ppermute (kind "kv").
+    ``strategy`` is the P2P pipeline variant of "p2p"/"kv" plans
+    ("split_send" | "encode_send" | "chunked"); empty for collectives."""
 
     key: tuple  # the cache key this plan was compiled under (hashable)
     kind: str
@@ -110,6 +128,7 @@ class CommPlan:
     buckets: tuple  # BucketPlans (or PhasePairs for kind="zero1")
     raw_leaf_ix: tuple = ()
     n_leaves: int = 0
+    strategy: str = ""  # P2P pipeline variant (kinds "p2p"/"kv" only)
 
     def _flat_buckets(self):
         for b in self.buckets:
@@ -132,12 +151,25 @@ class CommPlan:
     def ratio(self) -> float:
         return self.wire_bytes / max(self.raw_bytes, 1)
 
+    def width_for_dtype(self, dtype_name: str) -> int | None:
+        """Recorded send-phase codec width of the first compressed bucket
+        of ``dtype_name``, or None when that dtype rides a raw path.
+
+        Consumers that would otherwise re-probe width per call (the host
+        ``p2p/engine.Compressor``) consult this instead — the plan IS the
+        decided-once record (kinds "p2p"/"kv")."""
+        for b in self._flat_buckets():
+            if b.dtype_name == dtype_name and b.compressed:
+                return b.width
+        return None
+
     def summary(self) -> dict:
         """Human/benchmark-facing description of the compiled schedule."""
         return {
             "kind": self.kind,
             "axis": self.axis,
             "n_dev": self.n_dev,
+            "strategy": self.strategy,
             "backend": self.backend,
             "use_pallas": self.use_pallas,
             "n_buckets": len(self.buckets),

@@ -7,11 +7,19 @@ prefill-decode disaggregation).  Two deployment modes:
   * **PD-disaggregated** — prefill workers fill KV caches and ship them to
     decode workers over the compressed split-send P2P path
     (serve/kv_transfer.py); decode workers run the batched decode loop.
+    ``ServeConfig.pd_disaggregated`` turns the boundary on in-process:
+    every admitted request's prefilled cache crosses it through the
+    compressed host wire (``pack_cache``/``unpack_cache``), with the codec
+    schedule read from a kind-"kv" ``CommPlan`` cached on the cache
+    signature — the decision work is paid once, and every subsequent
+    admission hits the plan cache (bit-exact, so serving output is
+    identical to colocated mode).
 
 ``ServeEngine`` implements slot-based continuous batching: a fixed number of
 decode slots, each holding one request's cache position; finished slots are
 refilled from the queue without stopping the decode loop (static shapes —
-the compiled decode step never re-specializes).
+the compiled decode step never re-specializes, and the admission cache
+signature stays plan-cache-stable).
 """
 from __future__ import annotations
 
@@ -33,6 +41,9 @@ class ServeConfig:
     temperature: float = 0.0  # 0 = greedy
     eos_token: int = -1  # -1 = never stops early
     prefill_chunk: int = 64  # pad prompts to a multiple of this
+    # PD-disaggregation boundary: admitted caches cross prefill->decode
+    # through the compressed host wire, scheduled by a cached kv CommPlan
+    pd_disaggregated: bool = False
 
 
 def build_prefill_step(cfg: ArchConfig):
@@ -75,8 +86,21 @@ class ServeEngine:
     prefilled single-request cache into the slot via indexed updates.
     """
 
-    def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig):
+    def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig, *,
+                 kv_policy=None, kv_plan_cache=None):
         self.cfg, self.params, self.scfg = cfg, params, scfg
+        self.kv_policy = kv_policy
+        self.kv_plan_cache = kv_plan_cache
+        self.kv_compressor = None
+        if scfg.pd_disaggregated:
+            from repro.core.policy import CompressionPolicy
+            from repro.p2p.engine import Compressor
+            if self.kv_policy is None:
+                self.kv_policy = CompressionPolicy(min_bytes=0)
+            if self.kv_plan_cache is None:
+                from repro import sched
+                self.kv_plan_cache = sched.default_cache()
+            self.kv_compressor = Compressor(codec_name="packed")
         self.prefill_step = jax.jit(build_prefill_step(cfg))
         self.decode_step = jax.jit(build_decode_step(cfg))
         self._splice = jax.jit(self._splice_impl, donate_argnums=(0,))
@@ -127,6 +151,8 @@ class ServeEngine:
             one_cache = transformer.init_cache(self.cfg, 1, self.scfg.max_len)
             logits, one_cache = self.prefill_step(
                 self.params, {"tokens": jnp.asarray(toks[None])}, one_cache)
+            if self.scfg.pd_disaggregated:
+                one_cache = self._ship_kv(one_cache)
             # NOTE: left-padding shifts positions; acceptable for the demo
             # engine (pad=0 when prompts align with prefill_chunk)
             nxt = sample(logits[:, -1], self._next_key(), self.scfg.temperature)
@@ -140,6 +166,23 @@ class ServeEngine:
             self.slots[s] = req
             self.pos[s] = len(toks)
             self.budget[s] = req.max_new - 1  # first token came from prefill
+
+    def _ship_kv(self, one_cache):
+        """Cross the prefill->decode boundary: pack the freshly prefilled
+        cache with the host compressor and unpack it on the decode side.
+
+        The codec schedule comes from a kind-"kv" CommPlan keyed on the
+        cache signature (``kv_transfer.ship_cache``): the first admission
+        compiles it, every later admission of the same-shaped cache is a
+        plan-cache hit — zero re-derived decisions per request.  The wire
+        is bit-exact, so PD-disaggregated serving emits exactly the tokens
+        colocated serving would."""
+        from repro.serve.kv_transfer import ship_cache, unpack_cache
+
+        wire, _ = ship_cache(one_cache, self.kv_compressor,
+                             policy=self.kv_policy,
+                             plan_cache=self.kv_plan_cache)
+        return unpack_cache(wire, self.kv_compressor)
 
     def _next_key(self):
         self._key, k = jax.random.split(self._key)

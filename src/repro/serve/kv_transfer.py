@@ -14,6 +14,14 @@ Two call modes:
   * host-path (`pack_cache`/`unpack_cache`): PD workers are separate
     processes; the cache is encoded with the host rANS engine
     (p2p/engine.py) and shipped out-of-band (used by examples/).
+
+Plan-driven replay (paper §3.3 extended to serve wires): the per-transfer
+decisions — leaf bucketing, compress gates, codec widths — compile ONCE
+into a kind-"kv" ``CommPlan`` (``sched/compile.compile_kv_plan``, keyed on
+the cache pytree's signature).  ``sched.transfer_cache_with_plan`` replays
+the in-mesh path bit-identically; the host path consults the same plan for
+its codec widths (``pack_cache(plan=)``), so a serve engine with a stable
+cache signature decides once and hits the plan cache on every transfer.
 """
 from __future__ import annotations
 
@@ -30,7 +38,12 @@ from repro.core.split_send import p2p_send
 
 
 def _bucket_leaves(cache):
-    """Split cache leaves into (compressible, passthrough) index sets."""
+    """Split cache leaves into (compressible, passthrough) index sets.
+
+    THE bucketing rule for KV wires: ``transfer_cache`` applies it per
+    call, ``sched/compile.compile_kv_plan`` applies the identical rule at
+    compile time (kind "kv"), so the plan's recorded buckets match the
+    planless grouping exactly.  Works on arrays and ShapeDtypeStructs."""
     leaves = jax.tree_util.tree_leaves(cache)
     comp, raw = [], []
     for i, l in enumerate(leaves):
@@ -43,13 +56,24 @@ def _bucket_leaves(cache):
 
 
 def transfer_cache(cache, axis_name, perm, *, policy: CompressionPolicy,
-                   strategy: str = "split_send"):
+                   strategy: str = "split_send", plan=None):
     """Ship a KV-cache pytree across ``perm`` on mesh axis ``axis_name``.
 
     All compressible leaves are fused into one flat bf16/f32 message per
     dtype (paper Property 1: large blocks keep the codec efficient), then
-    moved with the split-send pipeline.  Returns (cache_at_dest, flag).
+    moved with the split-send pipeline.  Returns (cache_at_dest, flag) —
+    lossless: every leaf arrives bit-identical to a raw ppermute.
+
+    The planless reference: bucketing/gating/widths are re-derived from
+    ``policy`` per call.  Passing a compiled kind-"kv" ``CommPlan``
+    (``plan=``) replays the recorded schedule instead — bit-identical by
+    construction, since both routes drive ``split_send.p2p_dispatch`` with
+    the same arguments.  Callers with a signature-stable cache should
+    prefer ``sched.transfer_cache_with_plan`` (adds the keyed plan cache).
     """
+    if plan is not None:
+        from repro.sched.executor import execute_kv_transfer
+        return execute_kv_transfer(plan, cache, axis_name, perm)
     leaves, comp, raw = _bucket_leaves(cache)
     treedef = jax.tree_util.tree_structure(cache)
     out = list(leaves)
@@ -82,17 +106,22 @@ def transfer_cache(cache, axis_name, perm, *, policy: CompressionPolicy,
 # host path (separate prefill/decode processes)
 # ---------------------------------------------------------------------------
 
-def pack_cache(cache, engine) -> dict:
+def pack_cache(cache, engine, plan=None) -> dict:
     """Encode a cache pytree with the host P2P engine (rANS or packing).
 
     Returns a wire dict {"messages": [...], "treedef": ..., "meta": [...]}
-    suitable for out-of-band shipment."""
+    suitable for out-of-band shipment; ``unpack_cache`` restores every
+    leaf bit-exactly.  ``plan`` (a compiled kind-"kv" ``CommPlan``) hands
+    the engine its recorded per-dtype codec widths, replacing the
+    per-first-call ``calibrate.choose_width`` probe — the decided-once
+    schedule shared with the in-mesh wire."""
     leaves, comp, raw = _bucket_leaves(cache)
     msgs, meta = [], []
     for i, l in enumerate(leaves):
         arr = np.asarray(l)
         if i in comp:
-            msgs.append(engine.encode(arr))
+            msgs.append(engine.encode(arr, tensor_class="activation",
+                                      plan=plan))
             meta.append(("z", arr.shape, arr.dtype.name))
         else:
             msgs.append(arr)
@@ -105,6 +134,8 @@ def pack_cache(cache, engine) -> dict:
 
 
 def unpack_cache(wire: dict, engine):
+    """Inverse of :func:`pack_cache` (bit-exact regardless of whether the
+    pack was plan-driven: the width travels inside each message)."""
     out = []
     for msg, (kind, shape, dtype) in zip(wire["messages"], wire["meta"]):
         if kind == "z":
@@ -112,3 +143,20 @@ def unpack_cache(wire: dict, engine):
         else:
             out.append(jnp.asarray(msg))
     return jax.tree_util.tree_unflatten(wire["treedef"], out)
+
+
+def ship_cache(cache, engine, *, policy: CompressionPolicy,
+               plan_cache=None, axis_name: str = "data") -> tuple:
+    """Host-path PD shipment with a cached kind-"kv" plan.
+
+    Compiles (or fetches — keyed on the cache pytree signature) the kv
+    plan, packs with its recorded widths, and returns ``(wire, plan)``.
+    A serve engine whose decode-step cache signature is stable pays the
+    width/bucketing decision once and hits the plan cache on every
+    subsequent shipment; ``pack_cache``/``unpack_cache`` keep the wire
+    bit-exact either way."""
+    from repro import sched
+
+    plan = sched.cached_kv_plan(cache, axis_name, policy=policy, n_dev=1,
+                                plan_cache=plan_cache)
+    return pack_cache(cache, engine, plan=plan), plan

@@ -276,6 +276,61 @@ def _enc_fused():
         bk.encode_fused for bk in plan.buckets)
 
 
+# -- 4b3. p2p/kv plan executors: bit-parity + cache reuse across 8 devices -----
+@section("p2p_plan", ["p2p_plan_bitexact", "p2p_plan_reduce_exact",
+                      "p2p_plan_cache_hit", "kv_plan_bitexact"])
+def _p2p_plan():
+    from repro import sched
+
+    t = jnp.asarray(rng.normal(0, 0.02, (1 << 15,)), jnp.bfloat16)
+    acc0 = jnp.asarray(rng.normal(0, 1, (1 << 15,)), jnp.float32)
+    cache = sched.PlanCache()
+
+    def f(v, a):
+        planned, f1 = sched.p2p_send_with_plan(v, "data", perm, policy=policy,
+                                               cache=cache)
+        planless, f2 = p2p_send(v, "data", perm, policy=policy)
+        pr, f3 = sched.p2p_send_with_plan(v, "data", perm, policy=policy,
+                                          reduce_into=a, cache=cache)
+        ur, f4 = p2p_send(v, "data", perm, policy=policy, reduce_into=a)
+        return planned, planless, pr, ur, jnp.maximum(jnp.maximum(f1, f2),
+                                                      jnp.maximum(f3, f4))
+
+    mk = lambda: jax.jit(jax.shard_map(
+        f, mesh=mesh1, in_specs=(P(), P()), out_specs=(P(),) * 5,
+        axis_names={"data"}, check_vma=False))
+    planned, planless, pr, ur, flag = mk()(t, acc0)
+    res["p2p_plan_bitexact"] = bits_equal(planned, planless) and int(flag) == 0
+    res["p2p_plan_reduce_exact"] = bool(jnp.all(
+        jax.lax.bitcast_convert_type(pr, jnp.uint32)
+        == jax.lax.bitcast_convert_type(ur, jnp.uint32)))
+    mk()(t, acc0)  # fresh jit wrapper: re-trace -> pure plan-cache hits
+    # send and reducing send share one signature (reduce_into is a runtime
+    # argument, not a schedule decision): 1 compile, everything else hits
+    res["p2p_plan_cache_hit"] = (cache.stats.misses == 1
+                                 and cache.stats.hits >= 3)
+
+    from repro.models import transformer
+    kcfg = configs.get_smoke("smollm_135m")
+    kv_cache = transformer.init_cache(kcfg, 2, 64)
+    params2 = transformer.init(jax.random.PRNGKey(0), kcfg)
+    _, kv_cache = transformer.prefill(
+        params2, registry.make_batch(kcfg, 2, 32), kcfg, kv_cache)
+
+    def kvf(c):
+        a, f1 = sched.transfer_cache_with_plan(c, "data", perm, policy=policy,
+                                               plan_cache=sched.PlanCache())
+        b, f2 = transfer_cache(c, "data", perm, policy=policy)
+        return a, b, jnp.maximum(f1, f2)
+
+    got, want, flag = jax.jit(jax.shard_map(
+        kvf, mesh=mesh1, in_specs=(P(),), out_specs=(P(), P(), P()),
+        axis_names={"data"}, check_vma=False))(kv_cache)
+    res["kv_plan_bitexact"] = all(
+        bits_equal(a, b) for a, b in zip(jax.tree_util.tree_leaves(got),
+                                         jax.tree_util.tree_leaves(want)))
+
+
 # -- 4c. split_send fused reducing receiver across 8 devices -------------------
 @section("p2p_reduce", ["p2p_reduce_into_exact"])
 def _p2p_reduce():

@@ -120,3 +120,22 @@ def test_split_send_reduce_into_exact():
     """Fused reducing receiver == decode-then-add == acc + ppermute(x),
     bit-for-bit, across 8 devices."""
     assert get("p2p_reduce_into_exact")
+
+
+def test_p2p_plan_bitexact():
+    """p2p_send_with_plan == p2p_send bit-for-bit across 8 devices (plain
+    and reducing receivers)."""
+    assert get("p2p_plan_bitexact")
+    assert get("p2p_plan_reduce_exact")
+
+
+def test_p2p_plan_cache_reused():
+    """Repeated traces of the same P2P signature replay the cached plan
+    (one compile, everything else hits)."""
+    assert get("p2p_plan_cache_hit")
+
+
+def test_kv_plan_bitexact():
+    """transfer_cache_with_plan == transfer_cache bit-for-bit on a real
+    prefilled KV cache across 8 devices."""
+    assert get("kv_plan_bitexact")

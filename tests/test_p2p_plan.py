@@ -1,0 +1,466 @@
+"""P2P and serve-KV plan kinds: compiler gating, executor bit-parity,
+plan-cache reuse, persistence, and the host Compressor's plan-width
+consultation.
+
+Quick-gate coverage (1-device meshes + abstract-mesh traces):
+  * compile_p2p_plan / compile_kv_plan mirror the planless gating
+    (compress-vs-raw, widths per tensor class, chunk grids);
+  * p2p_send_with_plan == p2p_send and transfer_cache_with_plan ==
+    transfer_cache, bit-for-bit, across strategies, policies, and
+    reducing receivers;
+  * repeated transfer_cache_with_plan calls with the same cache
+    signature: hit counter increments, zero recompiles;
+  * one consolidated plan:p2p / plan:kv WireReport per execution;
+  * save_plans/load_plans round-trips the new kinds (pure data);
+  * pack_cache(plan=) / Compressor.encode(plan=) read the recorded width
+    instead of re-probing choose_width.
+
+8-device parity lives in tests/drivers/multidev.py (p2p_plan/kv_plan
+sections, slow gate).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import sched
+from repro.core import codec
+from repro.core import policy as policy_lib
+from repro.core.policy import CompressionPolicy
+from repro.core.split_send import p2p_send
+from repro.sched import compile as sched_compile
+from repro.serve.kv_transfer import pack_cache, ship_cache, transfer_cache, \
+    unpack_cache
+
+IDPERM = [(0, 0)]
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1,), ("data",))
+
+
+def bits(a):
+    lay = codec.LAYOUTS.get(jnp.dtype(a.dtype).name)
+    if lay is not None:
+        return jax.lax.bitcast_convert_type(a, lay.uint_dtype)
+    return a
+
+
+def make_cache(seed=0):
+    """A KV-cache-shaped pytree: bf16 K/V leaves, an f32 leaf, a scalar."""
+    rng = np.random.default_rng(seed)
+    return {
+        "k": jnp.asarray(rng.normal(0, 0.02, (2, 64, 4, 8)), jnp.bfloat16),
+        "v": jnp.asarray(rng.normal(0, 0.02, (2, 64, 4, 8)), jnp.bfloat16),
+        "b": jnp.asarray(rng.normal(0, 1, (300,)), jnp.float32),
+        "pos": jnp.asarray(7, jnp.int32),
+    }
+
+
+def _abstract_mesh(k, name="data"):
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(((name, k),))
+    except TypeError:
+        return AbstractMesh((k,), (name,))
+
+
+def _shmap(fn, mesh, n_in=1, n_out=2):
+    return jax.shard_map(fn, mesh=mesh, in_specs=(P(),) * n_in,
+                         out_specs=(P(),) * n_out, axis_names={"data"},
+                         check_vma=False)
+
+
+# ---------------------------------------------------------------------------
+# compiler gating
+# ---------------------------------------------------------------------------
+
+def test_p2p_plan_mirrors_policy_gate():
+    pol = CompressionPolicy(min_bytes=0)
+    x = jax.ShapeDtypeStruct((4096,), jnp.bfloat16)
+    plan = sched.compile_p2p_plan(x, "data", policy=pol, n_dev=8)
+    b = plan.buckets[0]
+    assert plan.kind == "p2p" and plan.strategy == "split_send"
+    assert b.path == "compressed"
+    assert b.width == pol.width_for("weight")
+    assert b.chunk == 4096  # already block-multiple
+    assert b.wire_bytes > 0 and b.raw_bytes == 4096 * 2
+    # split_send pays the split round-trip: encode_fused never recorded on
+    assert b.encode_fused is False
+    assert plan.summary()["n_encode_fused"] == 0
+    # gated off: below min_bytes, or on a raw axis
+    raw = sched.compile_p2p_plan(x, "data",
+                                 policy=CompressionPolicy(min_bytes=1 << 30),
+                                 n_dev=8)
+    assert raw.buckets[0].path == "raw"
+    raw2 = sched.compile_p2p_plan(x, "model", policy=pol, n_dev=8)
+    assert raw2.buckets[0].path == "raw"
+
+
+def test_p2p_plan_unsupported_dtype_rides_raw(mesh):
+    """Codec-unsupported dtypes compile to the raw path (no KeyError) and
+    the plan replay matches the planless raw ppermute bit-for-bit."""
+    pol = CompressionPolicy(min_bytes=0)
+    x = jnp.arange(4096, dtype=jnp.int32)
+    plan = sched.compile_p2p_plan(x, "data", policy=pol, n_dev=1)
+    assert plan.buckets[0].path == "raw"
+    a, _ = jax.jit(_shmap(
+        lambda v: sched.p2p_send_with_plan(v, "data", IDPERM, policy=pol,
+                                           cache=sched.PlanCache()),
+        mesh))(x)
+    b, _ = jax.jit(_shmap(
+        lambda v: p2p_send(v, "data", IDPERM, policy=pol), mesh))(x)
+    assert (a == b).all()
+
+
+def test_kv_plan_rejects_mismatched_cache(mesh):
+    """A plan for one cache signature must fail loudly on another (stale
+    plans passed via transfer_cache(plan=) never mis-scatter silently)."""
+    pol = CompressionPolicy(min_bytes=0)
+    plan = sched.compile_kv_plan(make_cache(), "data", policy=pol, n_dev=1)
+    wrong = dict(make_cache(), k=jnp.zeros((2, 128, 4, 8), jnp.bfloat16))
+    with pytest.raises(AssertionError, match="plan recorded"):
+        jax.eval_shape(_shmap(
+            lambda c: transfer_cache(c, "data", IDPERM, policy=pol,
+                                     plan=plan), mesh), wrong)
+
+
+def test_p2p_plan_encode_strategies_record_fused_encode():
+    pol = CompressionPolicy(min_bytes=0)
+    x = jax.ShapeDtypeStruct((4096,), jnp.bfloat16)
+    enc = sched.compile_p2p_plan(x, "data", policy=pol, n_dev=8,
+                                 strategy="encode_send")
+    assert enc.buckets[0].encode_fused is True
+    enc_u = sched.compile_p2p_plan(
+        x, "data", policy=dataclasses.replace(pol, fused_encode=False),
+        n_dev=8, strategy="encode_send")
+    assert enc_u.buckets[0].encode_fused is False
+    with pytest.raises(ValueError):
+        sched.compile_p2p_plan(x, "data", policy=pol, n_dev=8,
+                               strategy="warp_send")
+
+
+def test_p2p_plan_chunked_grid_matches_pipeline():
+    """chunked strategy: the recorded chunk is chunked_pipeline_send's
+    per-chunk length incl. the degenerate-chunk guard."""
+    pol = CompressionPolicy(min_bytes=0)
+    # n=1537: ceil(1537/4)=385 -> block-rounded 512 -> 4 non-empty chunks
+    plan = sched.compile_p2p_plan(
+        jax.ShapeDtypeStruct((1537,), jnp.bfloat16), "data", policy=pol,
+        n_dev=8, strategy="chunked")
+    assert plan.buckets[0].chunk == 512
+    # n=100 -> one 512-elem chunk, not 4 all-padding ones
+    plan2 = sched.compile_p2p_plan(
+        jax.ShapeDtypeStruct((100,), jnp.bfloat16), "data", policy=pol,
+        n_dev=8, strategy="chunked")
+    assert plan2.buckets[0].chunk == 512
+    assert plan2.buckets[0].wire_bytes < plan.buckets[0].wire_bytes * 0.3
+
+
+def test_kv_plan_buckets_match_transfer_cache_grouping():
+    pol = CompressionPolicy(min_bytes=0)
+    cache = make_cache()
+    plan = sched.compile_kv_plan(cache, "data", policy=pol, n_dev=8)
+    assert plan.kind == "kv"
+    leaves = jax.tree_util.tree_leaves(cache)
+    # flatten order of the dict is sorted keys: b, k, pos, v
+    by_dtype = {b.dtype_name: b for b in plan.buckets}
+    assert set(by_dtype) == {"bfloat16", "float32"}
+    assert [m[0] for m in by_dtype["bfloat16"].members] == [1, 3]  # k, v
+    assert by_dtype["bfloat16"].length == 2 * leaves[1].size
+    assert plan.raw_leaf_ix == (2,)  # the int32 scalar
+    assert plan.n_leaves == 4
+    # activation-class width on every compressed bucket
+    assert all(b.width == pol.width_for("activation")
+               for b in plan.buckets)
+    # ShapeDtypeStruct trees compile to the identical plan (same key)
+    abstract = jax.eval_shape(lambda: make_cache())
+    plan2 = sched.compile_kv_plan(abstract, "data", policy=pol, n_dev=8)
+    assert plan2 == plan
+
+
+# ---------------------------------------------------------------------------
+# executor bit-parity vs the planless paths
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["split_send", "encode_send", "chunked"])
+@pytest.mark.parametrize("enabled", [True, False])
+def test_p2p_send_with_plan_bit_identical(mesh, strategy, enabled):
+    pol = (CompressionPolicy(min_bytes=0) if enabled
+           else CompressionPolicy.disabled())
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(0, 0.02, 4096 + 17), jnp.bfloat16)
+    cache = sched.PlanCache()
+    a, fa = jax.jit(_shmap(
+        lambda v: sched.p2p_send_with_plan(v, "data", IDPERM, policy=pol,
+                                           strategy=strategy, cache=cache),
+        mesh))(x)
+    b, fb = jax.jit(_shmap(
+        lambda v: p2p_send(v, "data", IDPERM, policy=pol, strategy=strategy),
+        mesh))(x)
+    assert int(fa) == int(fb) == 0
+    assert (bits(a) == bits(b)).all()
+    assert cache.stats.misses == 1
+
+
+@pytest.mark.parametrize("strategy", ["split_send", "encode_send"])
+def test_p2p_send_with_plan_reduce_into_parity(mesh, strategy):
+    """Reducing receiver through the plan: fused (split_send) and
+    decode-then-add (encode_send) both bit-match the planless path."""
+    pol = CompressionPolicy(min_bytes=0)
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(0, 0.02, 2048), jnp.bfloat16)
+    acc = jnp.asarray(rng.normal(0, 1, 2048), jnp.float32)
+    a, fa = jax.jit(_shmap(
+        lambda v, ac: sched.p2p_send_with_plan(
+            v, "data", IDPERM, policy=pol, strategy=strategy, reduce_into=ac,
+            cache=sched.PlanCache()), mesh, n_in=2))(x, acc)
+    b, fb = jax.jit(_shmap(
+        lambda v, ac: p2p_send(v, "data", IDPERM, policy=pol,
+                               strategy=strategy, reduce_into=ac),
+        mesh, n_in=2))(x, acc)
+    assert int(fa) == int(fb) == 0
+    assert (bits(a) == bits(b)).all()
+    assert (bits(a) == bits(acc + x.astype(jnp.float32))).all()
+
+
+def test_p2p_send_plan_kwarg_routes_through_executor(mesh):
+    """split_send.p2p_send(plan=) replays the compiled schedule (same
+    result, one consolidated report)."""
+    pol = CompressionPolicy(min_bytes=0)
+    x = jnp.asarray(np.random.default_rng(5).normal(0, 0.02, 1024),
+                    jnp.bfloat16)
+    plan = sched.compile_p2p_plan(x, "data", policy=pol, n_dev=1)
+    a, _ = jax.jit(_shmap(
+        lambda v: p2p_send(v, "data", IDPERM, policy=pol, plan=plan),
+        mesh))(x)
+    b, _ = jax.jit(_shmap(
+        lambda v: p2p_send(v, "data", IDPERM, policy=pol), mesh))(x)
+    assert (bits(a) == bits(b)).all()
+
+
+@pytest.mark.parametrize("strategy", ["split_send", "encode_send"])
+def test_transfer_cache_with_plan_bit_identical(mesh, strategy):
+    pol = CompressionPolicy(min_bytes=0)
+    cache = make_cache(seed=6)
+    pc = sched.PlanCache()
+    a, fa = jax.jit(_shmap(
+        lambda c: sched.transfer_cache_with_plan(
+            c, "data", IDPERM, policy=pol, strategy=strategy, plan_cache=pc),
+        mesh))(cache)
+    b, fb = jax.jit(_shmap(
+        lambda c: transfer_cache(c, "data", IDPERM, policy=pol,
+                                 strategy=strategy), mesh))(cache)
+    assert int(fa) == int(fb) == 0
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        assert x.dtype == y.dtype
+        assert (bits(x) == bits(y)).all()
+    assert pc.stats.misses == 1
+
+
+def test_transfer_cache_mixed_gate_parity(mesh):
+    """min_bytes between bucket sizes: the f32 bucket rides raw, bf16
+    compresses — parity across the mixed dispatch."""
+    cache = make_cache(seed=7)
+    pol = CompressionPolicy(min_bytes=2048)  # f32 bucket (1200 B) stays raw
+    pc = sched.PlanCache()
+    a, _ = jax.jit(_shmap(
+        lambda c: sched.transfer_cache_with_plan(c, "data", IDPERM,
+                                                 policy=pol, plan_cache=pc),
+        mesh))(cache)
+    b, _ = jax.jit(_shmap(
+        lambda c: transfer_cache(c, "data", IDPERM, policy=pol), mesh))(cache)
+    paths = {bk.dtype_name: bk.path
+             for bk in next(iter(pc._plans.values())).buckets}
+    assert paths == {"bfloat16": "compressed", "float32": "raw"}
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        assert (bits(x) == bits(y)).all()
+
+
+# ---------------------------------------------------------------------------
+# plan-cache reuse: repeated same-signature transfers never recompile
+# ---------------------------------------------------------------------------
+
+def test_repeated_transfer_cache_hits_plan_cache():
+    """The satellite contract: repeated transfer_cache_with_plan calls with
+    the same cache signature — hit counter increments, zero recompiles."""
+    pol = CompressionPolicy(min_bytes=0)
+    pc = sched.PlanCache()
+    cache = jax.eval_shape(lambda: make_cache())
+    am = _abstract_mesh(8)
+    perm = [(i, (i + 1) % 8) for i in range(8)]
+
+    def trace():
+        jax.eval_shape(_shmap(
+            lambda c: sched.transfer_cache_with_plan(
+                c, "data", perm, policy=pol, plan_cache=pc), am), cache)
+
+    for n in range(4):
+        trace()
+        assert pc.stats == sched.cache.CacheStats(hits=n, misses=1)
+    # different VALUES, same signature: still a hit
+    jax.eval_shape(_shmap(
+        lambda c: sched.transfer_cache_with_plan(
+            c, "data", perm, policy=pol, plan_cache=pc), am),
+        jax.eval_shape(lambda: make_cache(seed=99)))
+    assert pc.stats.hits == 4 and pc.stats.misses == 1
+    # signature change (longer sequence axis): miss + recompile
+    bigger = dict(cache, k=jax.ShapeDtypeStruct((2, 128, 4, 8), jnp.bfloat16))
+    jax.eval_shape(_shmap(
+        lambda c: sched.transfer_cache_with_plan(
+            c, "data", perm, policy=pol, plan_cache=pc), am), bigger)
+    assert pc.stats.misses == 2
+
+
+def test_repeated_p2p_send_hits_plan_cache():
+    pol = CompressionPolicy(min_bytes=0)
+    pc = sched.PlanCache()
+    am = _abstract_mesh(8)
+    perm = [(i, (i + 1) % 8) for i in range(8)]
+    x = jax.ShapeDtypeStruct((1 << 14,), jnp.bfloat16)
+    for n in range(3):
+        jax.eval_shape(_shmap(
+            lambda v: sched.p2p_send_with_plan(v, "data", perm, policy=pol,
+                                               cache=pc), am), x)
+        assert pc.stats == sched.cache.CacheStats(hits=n, misses=1)
+    # strategy is part of the signature
+    jax.eval_shape(_shmap(
+        lambda v: sched.p2p_send_with_plan(v, "data", perm, policy=pol,
+                                           strategy="encode_send", cache=pc),
+        am), x)
+    assert pc.stats.misses == 2
+
+
+# ---------------------------------------------------------------------------
+# consolidated wire accounting
+# ---------------------------------------------------------------------------
+
+def test_p2p_plan_emits_one_consolidated_report():
+    pol = CompressionPolicy(min_bytes=0)
+    am = _abstract_mesh(8)
+    perm = [(i, (i + 1) % 8) for i in range(8)]
+    x = jax.ShapeDtypeStruct((1 << 14,), jnp.bfloat16)
+
+    policy_lib.clear_wire_reports()
+    jax.eval_shape(_shmap(
+        lambda v: sched.p2p_send_with_plan(v, "data", perm, policy=pol,
+                                           cache=sched.PlanCache()), am), x)
+    plan_reports = policy_lib.wire_reports()
+    policy_lib.clear_wire_reports()
+    jax.eval_shape(_shmap(
+        lambda v: p2p_send(v, "data", perm, policy=pol), am), x)
+    flat = policy_lib.wire_reports()
+    policy_lib.clear_wire_reports()
+    assert len(plan_reports) == 1 and plan_reports[0].name == "plan:p2p"
+    assert plan_reports[0].raw_bytes == sum(r.raw_bytes for r in flat)
+    assert plan_reports[0].wire_bytes == sum(r.wire_bytes for r in flat)
+
+
+def test_kv_plan_emits_one_consolidated_report():
+    pol = CompressionPolicy(min_bytes=0)
+    am = _abstract_mesh(8)
+    perm = [(i, (i + 1) % 8) for i in range(8)]
+    cache = jax.eval_shape(lambda: make_cache())
+
+    policy_lib.clear_wire_reports()
+    jax.eval_shape(_shmap(
+        lambda c: sched.transfer_cache_with_plan(
+            c, "data", perm, policy=pol, plan_cache=sched.PlanCache()),
+        am), cache)
+    plan_reports = policy_lib.wire_reports()
+    policy_lib.clear_wire_reports()
+    jax.eval_shape(_shmap(
+        lambda c: transfer_cache(c, "data", perm, policy=pol), am), cache)
+    flat = policy_lib.wire_reports()
+    policy_lib.clear_wire_reports()
+    assert len(plan_reports) == 1 and plan_reports[0].name == "plan:kv"
+    assert len(flat) == 2  # one per dtype bucket
+    assert plan_reports[0].raw_bytes == sum(r.raw_bytes for r in flat)
+    assert plan_reports[0].wire_bytes == sum(r.wire_bytes for r in flat)
+    # the compiler's eval_shape accounting matches the traced wires
+    plan = sched.compile_kv_plan(cache, "data", policy=pol, n_dev=8)
+    assert plan.wire_bytes == plan_reports[0].wire_bytes
+
+
+# ---------------------------------------------------------------------------
+# persistence: the new kinds are pure data like every other plan
+# ---------------------------------------------------------------------------
+
+def test_p2p_kv_plans_persist_roundtrip(tmp_path):
+    pol = CompressionPolicy(min_bytes=0)
+    pc = sched.PlanCache()
+    x = jax.ShapeDtypeStruct((4096,), jnp.bfloat16)
+    sched_compile.cached_p2p_plan(x, "data", policy=pol, n_dev=8, cache=pc)
+    sched_compile.cached_kv_plan(jax.eval_shape(lambda: make_cache()),
+                                 "data", policy=pol, n_dev=8, plan_cache=pc)
+    path = str(tmp_path / "plans.pkl")
+    assert sched.save_plans(path, pc) == 2
+    fresh = sched.PlanCache()
+    assert sched.load_plans(path, fresh) == 2
+    # a live-keyed lookup hits the restored kv plan (no recompile): the
+    # restarted-serve-engine path
+    key = sched_compile.kv_plan_key(make_cache(seed=1), "data", pol,
+                                    "split_send", 8)
+    got = fresh.get_or_compile(key, lambda: pytest.fail("must hit"))
+    assert got.kind == "kv" and fresh.stats.hits == 1
+
+
+# ---------------------------------------------------------------------------
+# host path: the Compressor consults the plan instead of re-probing
+# ---------------------------------------------------------------------------
+
+def test_compressor_consults_plan_width(monkeypatch):
+    from repro.p2p import engine as pe
+
+    pol = CompressionPolicy(min_bytes=0)
+    cache = make_cache(seed=8)
+    plan = sched.compile_kv_plan(cache, "data", policy=pol, n_dev=1)
+    comp = pe.Compressor(codec_name="packed")
+    monkeypatch.setattr(
+        pe, "choose_width",
+        lambda *a, **k: pytest.fail("plan given — width probe must not run"))
+    wire = pack_cache(cache, comp, plan=plan)
+    back = unpack_cache(wire, comp)
+    for a, b in zip(jax.tree_util.tree_leaves(cache),
+                    jax.tree_util.tree_leaves(back)):
+        assert (bits(a) == bits(b)).all()
+    widths = {m.dtype_name: m.width for m in wire["messages"]
+              if hasattr(m, "width")}
+    assert widths["bfloat16"] == plan.width_for_dtype("bfloat16")
+    assert widths["float32"] == plan.width_for_dtype("float32")
+
+
+def test_ship_cache_caches_kv_plan():
+    from repro.p2p.engine import Compressor
+
+    pol = CompressionPolicy(min_bytes=0)
+    pc = sched.PlanCache()
+    comp = Compressor(codec_name="packed")
+    cache = make_cache(seed=9)
+    wire1, plan1 = ship_cache(cache, comp, policy=pol, plan_cache=pc)
+    wire2, plan2 = ship_cache(make_cache(seed=10), comp, policy=pol,
+                              plan_cache=pc)
+    assert plan1 is plan2  # same signature -> cached schedule
+    assert pc.stats == sched.cache.CacheStats(hits=1, misses=1)
+    back = unpack_cache(wire1, comp)
+    for a, b in zip(jax.tree_util.tree_leaves(cache),
+                    jax.tree_util.tree_leaves(back)):
+        assert (bits(a) == bits(b)).all()
+
+
+def test_compressor_width_probe_still_runs_without_plan():
+    """No plan: the per-(class, dtype) probe cache keeps working."""
+    from repro.p2p.engine import Compressor
+
+    comp = Compressor(codec_name="packed")
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 0.02, 2048),
+                    jnp.bfloat16)
+    m = comp.encode(x, tensor_class="t")
+    assert ("t", "bfloat16") in comp._width_cache
+    assert m.width == comp._width_cache[("t", "bfloat16")]

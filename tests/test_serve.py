@@ -75,6 +75,48 @@ def test_kv_pack_unpack_bit_exact(smoke_model):
             assert bool(jnp.all(a == b))
 
 
+def test_pd_disaggregated_matches_colocated():
+    """PD-disaggregated serving (every admission's cache crosses the
+    compressed host wire, scheduled by a cached kind-"kv" CommPlan) emits
+    exactly the tokens colocated serving does, and the plan cache compiles
+    once — every later admission is a hit."""
+    from repro import sched
+    from repro.core.policy import CompressionPolicy
+
+    cfg = configs.get_smoke("smollm_135m")
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab, 16).astype(np.int32)
+               for _ in range(5)]
+    outs, plan_cache = [], None
+    for pd in (False, True):
+        pc = sched.PlanCache() if pd else None
+        eng = ServeEngine(
+            cfg, params,
+            ServeConfig(batch_slots=2, max_len=64, prefill_chunk=16,
+                        pd_disaggregated=pd),
+            kv_policy=CompressionPolicy(min_bytes=0) if pd else None,
+            kv_plan_cache=pc)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new=6))
+        done = eng.run()
+        outs.append(sorted((r.rid, tuple(r.out)) for r in done))
+        plan_cache = pc or plan_cache
+    assert outs[0] == outs[1]
+    assert plan_cache.stats.misses == 1
+    assert plan_cache.stats.hits == len(prompts) - 1
+    plan = next(iter(plan_cache._plans.values()))
+    assert plan.kind == "kv"
+
+
+def test_fig11_smoke_gates_plan_hit_rate():
+    """The benchmark's CI gate: the repeated-signature serve loop must show
+    >= 90% kv plan-cache hit rate (asserted inside run)."""
+    from benchmarks.fig11_kv_transfer import run
+    out = run(smoke=True)
+    assert out["plan_loop"]["hit_rate"] >= 0.9
+
+
 def test_whisper_decode_with_encoder():
     cfg = configs.get_smoke("whisper_small")
     params = transformer.init(jax.random.PRNGKey(0), cfg)
