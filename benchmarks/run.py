@@ -24,6 +24,7 @@ MODULES = [
     ("fig16", "benchmarks.fig16_resources"),
     ("sched", "benchmarks.fig_sched"),
     ("encode", "benchmarks.fig_encode"),
+    ("sync", "benchmarks.fig_sync"),
 ]
 
 
@@ -37,11 +38,15 @@ def main():
     from repro import kernels
 
     failures = []
+    total: dict = {}
     for key, modname in MODULES:
         if only and key not in only:
             continue
         t0 = time.time()
-        before = kernels.fallback_counts()
+        # Reset the counters per module: fallback attribution must name the
+        # benchmark that actually degraded, not accumulate across figs (the
+        # once-per-op warning also re-arms, so each module logs its own).
+        kernels.clear_fallbacks()
         try:
             mod = importlib.import_module(modname)
             mod.run()
@@ -53,12 +58,11 @@ def main():
         # Surface silent fast-path degrades (kernels.record_fallback): a
         # benchmark that quietly ran reference fallbacks would otherwise
         # report numbers for a dispatch it never exercised.
-        after = kernels.fallback_counts()
-        delta = {op: after[op] - before.get(op, 0)
-                 for op in after if after[op] != before.get(op, 0)}
-        if delta:
-            print(f"  [{key} kernel fast-path fallbacks: {delta}]")
-    total = kernels.fallback_counts()
+        per_module = kernels.fallback_counts()
+        if per_module:
+            print(f"  [{key} kernel fast-path fallbacks: {per_module}]")
+        for op, c in per_module.items():
+            total[op] = total.get(op, 0) + c
     print(f"\nkernel fast-path fallbacks (all benchmarks): "
           f"{total if total else 'none'}")
     print(f"{'ALL BENCHMARKS PASSED' if not failures else 'FAILED: ' + ', '.join(failures)}")

@@ -85,6 +85,35 @@ def choose_width(
     return best
 
 
+def choose_delta_widths(
+    x: jax.Array, base: jax.Array, *, block: int = 512,
+    target_exc_rate: float = 1e-3, max_exc_frac: float = 0.02,
+) -> tuple:
+    """Calibrate the XOR-delta wire's (exp_width, lo_width) from live data.
+
+    ``x``/``base`` are two consecutive weight versions (or representative
+    twins).  The exponent-delta width reuses :func:`choose_width` on the
+    delta bit pattern; the lo width is the smallest W whose per-ELEMENT
+    escape rate stays under half the exception capacity (the lo packer
+    escapes per element, not per block — the XOR carry tail is heavy but
+    element-local).  Store the result in
+    ``CompressionProfile.widths["delta"/"delta_lo"]`` to drive
+    ``CompressionPolicy.delta_widths``."""
+    lay = codec.layout_of(x.dtype)
+    d = codec.xor_delta(x.reshape(-1), base.reshape(-1))
+    w_exp = choose_width(d, block=block, target_exc_rate=target_exc_rate,
+                         max_exc_frac=max_exc_frac).width
+    _, lo = codec.split_planes(d)
+    lo = np.asarray(lo.astype(jnp.uint32))
+    budget = max_exc_frac / 2  # leave half the capacity as drift headroom
+    w_lo = lay.lo_bits
+    for w in range(1, lay.lo_bits + 1):
+        if float(np.mean(lo >= (1 << w))) <= budget:
+            w_lo = w
+            break
+    return int(w_exp), int(w_lo)
+
+
 @dataclasses.dataclass(frozen=True)
 class CompressionProfile:
     """Calibrated parameters per tensor class, reusable across steps.

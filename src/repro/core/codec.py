@@ -95,6 +95,97 @@ def merge_planes(
 
 
 # ---------------------------------------------------------------------------
+# XOR delta transform (weight-sync subsystem, src/repro/sync/).
+#
+# Consecutive policy-weight versions differ by small optimizer steps, so the
+# bitwise XOR of a version against the receiver's base version concentrates
+# its nonzero bits in the low mantissa positions (and is EXACTLY zero for
+# weights the step didn't move — ubiquitous for bf16, where sub-ULP updates
+# round away).  The delta is itself a valid bit pattern of the same float
+# format, so the existing split+pack wire applies to it unchanged; the
+# transform is a pure involution on the raw bits — NaN payloads, infinities
+# and subnormals round-trip exactly.
+# ---------------------------------------------------------------------------
+
+
+def xor_delta(x: jax.Array, base: jax.Array) -> jax.Array:
+    """Bitwise XOR of two same-shape, same-dtype float tensors.
+
+    Returns the delta reinterpreted as the input float dtype (so the
+    split+pack codec applies to it directly).  Self-inverse:
+    ``xor_delta(xor_delta(x, base), base)`` is bit-identical to ``x`` —
+    the receiver reconstructs by XORing the decoded delta against its own
+    copy of ``base``.  Pure bit movement (bitcast + xor): no float
+    arithmetic touches the values, so every NaN payload / Inf / subnormal
+    bit survives."""
+    lay = layout_of(x.dtype)
+    if jnp.dtype(base.dtype) != jnp.dtype(x.dtype) or base.shape != x.shape:
+        raise ValueError(
+            f"xor_delta needs matching operands, got {x.shape}/{x.dtype} "
+            f"vs {base.shape}/{base.dtype}")
+    u = lay.uint_dtype
+    bits = (jax.lax.bitcast_convert_type(x, u)
+            ^ jax.lax.bitcast_convert_type(base, u))
+    return jax.lax.bitcast_convert_type(bits, lay.dtype)
+
+
+def concat_bits(parts: list) -> jax.Array:
+    """Concatenate same-dtype float arrays WITHOUT touching their bits.
+
+    XLA's float concatenate may quiet signaling-NaN payloads (observed on
+    CPU); routing through the uint domain keeps bucket fusion exactly
+    bit-preserving — required wherever the wire contract is bitwise (the
+    weight-sync buckets)."""
+    if len(parts) == 1:
+        return parts[0]
+    lay = layout_of(parts[0].dtype)
+    u = lay.uint_dtype
+    bits = jnp.concatenate(
+        [jax.lax.bitcast_convert_type(p, u) for p in parts])
+    return jax.lax.bitcast_convert_type(bits, lay.dtype)
+
+
+def slice_bits(x: jax.Array, lo: int, hi: int) -> jax.Array:
+    """``x[lo:hi]`` for a flat float array, in the uint domain (XLA's float
+    slice may quiet signaling-NaN payloads, like its concatenate; the
+    weight-sync bucket scatter must be exactly bit-preserving)."""
+    lay = layout_of(x.dtype)
+    bits = jax.lax.bitcast_convert_type(x, lay.uint_dtype)
+    return jax.lax.bitcast_convert_type(bits[lo:hi], lay.dtype)
+
+
+def concat_members(src, members) -> jax.Array:
+    """Fuse pytree leaves into one flat bucket, bit-exactly.
+
+    ``members`` is the plan-IR membership tuple ``((leaf_index, shape,
+    size), ...)``; every weight-sync path (planless wire, plan executor,
+    host engine) fuses through HERE so the bucket layout — and the sNaN-
+    safe uint-domain concat — can never diverge between them."""
+    return concat_bits([src[i].reshape(-1) for i, _, _ in members])
+
+
+def split_members(got, members):
+    """Inverse of :func:`concat_members`: yield ``(leaf_index, leaf)``
+    pairs sliced bit-exactly out of the fused bucket (trailing codec
+    padding, if any, is ignored)."""
+    offs = np.cumsum([0] + [m[2] for m in members])
+    for k, (i, shape, _) in enumerate(members):
+        yield i, slice_bits(got, int(offs[k]), int(offs[k + 1])).reshape(shape)
+
+
+def pad_flat_bits(x: jax.Array, multiple: int) -> jax.Array:
+    """Zero-pad a flat float array to a multiple, in the uint domain (the
+    bit-preserving twin of the collectives' ``_pad_flat``)."""
+    r = (-x.shape[0]) % multiple
+    if r == 0:
+        return x
+    lay = layout_of(x.dtype)
+    bits = jax.lax.bitcast_convert_type(x, lay.uint_dtype)
+    bits = jnp.concatenate([bits, jnp.zeros((r,), lay.uint_dtype)])
+    return jax.lax.bitcast_convert_type(bits, lay.dtype)
+
+
+# ---------------------------------------------------------------------------
 # fp8 exponent pair packing (paper §4.1: "pack two FP8 values into a single
 # 16-bit unit and jointly extract their exponent fields").
 # ---------------------------------------------------------------------------

@@ -263,3 +263,144 @@ def decode_message(m: CompressedMessage) -> jax.Array:
     lo = bitplane_unpack(m.lo, lay.lo_bits)[:n].astype(lay.uint_dtype)
     exp = unpack_exponents(m.exp)
     return codec.merge_planes(exp, lo, lay.dtype, m.shape)
+
+
+# ---------------------------------------------------------------------------
+# XOR-delta wire format (weight sync, src/repro/sync/).
+#
+# A warm delta (consecutive weight versions) is mostly-zero in BOTH planes:
+# the exponent-delta plane packs with the existing block codec at width ~1
+# (zero-escape absorbs the untouched elements), and the lo-delta plane —
+# which the standard wire ships raw, because sign|mantissa of live floats is
+# near-uniform — concentrates in the low few bits, so it gets its own width
+# packer.  Lo deltas have a geometric carry tail (an update that crosses a
+# mantissa power boundary flips a long run of bits), so the lo packer
+# escapes at ELEMENT granularity: outliers ride a static-capacity
+# (idx, raw) exception list, exactly restored at decode.  Losslessness is
+# unconditional: if exceptions overflow the capacity, ``overflow`` is set
+# and the caller falls back to a full-tensor send (sync/engine.py does this
+# automatically on the host path).
+# ---------------------------------------------------------------------------
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("payload", "exc_idx", "exc_raw", "overflow"),
+    meta_fields=("width", "n"),
+)
+@dataclasses.dataclass(frozen=True)
+class DeltaPlane:
+    """Width-packed lo-delta plane with element-granular exact exceptions."""
+
+    payload: jax.Array  # uint32 (n_pad // 32, width) bit-planes
+    exc_idx: jax.Array  # int32 (E,) element indices (n_pad = unused slot)
+    exc_raw: jax.Array  # uint32 (E,) raw lo values of exception elements
+    overflow: jax.Array  # int32 scalar: 1 if exceptions overflowed capacity
+    width: int
+    n: int  # original element count (pre-padding)
+
+
+def pack_delta_plane(vals: jax.Array, width: int, *,
+                     exc_frac: float = 0.02) -> DeltaPlane:
+    """Pack a uint32 lo-delta stream at ``width`` bits/element.
+
+    Elements that do not fit (the carry tail) escape exactly through a
+    static-capacity exception list of ``max(4, exc_frac * n)`` entries;
+    ``overflow`` reports capacity exhaustion (decode would be lossy — the
+    caller must fall back to a full send)."""
+    assert width >= 1, width
+    n = vals.shape[0]
+    v = _pad_to(vals.astype(jnp.uint32), GROUP, pad_mode="zero")
+    mask = jnp.uint32((1 << width) - 1)
+    fits = v <= mask
+    payload = bitplane_pack(jnp.where(fits, v, jnp.uint32(0)), width)
+    cap = min(n, max(4, int(np.ceil(n * exc_frac))))
+    bad = ~fits
+    n_bad = jnp.sum(bad.astype(jnp.int32))
+    (exc_idx,) = jnp.nonzero(bad, size=cap, fill_value=v.shape[0])
+    exc_idx = exc_idx.astype(jnp.int32)
+    exc_raw = v[jnp.minimum(exc_idx, v.shape[0] - 1)]
+    exc_raw = jnp.where(exc_idx < v.shape[0], exc_raw, 0)
+    overflow = (n_bad > cap).astype(jnp.int32)
+    return DeltaPlane(payload=payload, exc_idx=exc_idx, exc_raw=exc_raw,
+                      overflow=overflow, width=width, n=n)
+
+
+def unpack_delta_plane(p: DeltaPlane) -> jax.Array:
+    """Exact inverse of :func:`pack_delta_plane` (when ``overflow == 0``).
+    Returns uint32 (n,)."""
+    vals = bitplane_unpack(p.payload, p.width)
+    vals = vals.at[p.exc_idx].set(p.exc_raw, mode="drop")
+    return vals[: p.n]
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("lo", "exp"),
+    meta_fields=("dtype_name", "shape"),
+)
+@dataclasses.dataclass(frozen=True)
+class DeltaMessage:
+    """Encoded XOR delta of one tensor against a shared base version.
+
+    The existing split applies to the delta's raw bit pattern
+    (``codec.xor_delta`` keeps it in the float dtype): the exponent-delta
+    plane rides the standard block packer, the lo-delta plane the width
+    packer above.  Static shapes throughout — the wire size depends only on
+    (n, widths), so plans can record it via ``eval_shape``."""
+
+    lo: DeltaPlane
+    exp: PackedPlane
+    dtype_name: str
+    shape: tuple
+
+    def wire_bytes(self) -> int:
+        e, l = self.exp, self.lo
+        return int(
+            l.payload.size * 4 + l.exc_idx.size * 4 + l.exc_raw.size * 4 + 4
+            + e.payload.size * 4 + e.bases.size + e.exc_idx.size * 4
+            + e.exc_raw.size + 4
+        )
+
+    def raw_bytes(self) -> int:
+        lay = codec.LAYOUTS[self.dtype_name]
+        return int(np.prod(self.shape)) * lay.total_bits // 8
+
+    def ratio(self) -> float:
+        return self.wire_bytes() / self.raw_bytes()
+
+    @property
+    def overflow(self) -> jax.Array:
+        """1 if EITHER plane's exceptions overflowed (decode would be lossy)."""
+        return jnp.maximum(self.exp.overflow, self.lo.overflow)
+
+
+def encode_delta(
+    x: jax.Array, base: jax.Array, *, width: int, lo_width: int,
+    block: int = 512, exc_frac: float = 0.02,
+) -> DeltaMessage:
+    """XOR ``x`` against ``base`` and encode the delta bit pattern.
+
+    ``width`` packs the exponent-delta plane (existing block codec, zero
+    escape), ``lo_width`` the lo-delta plane (element-exception packer).
+    Bit-exact through :func:`decode_delta` whenever ``overflow == 0`` —
+    including NaN payloads, infinities and subnormals in either operand."""
+    lay = codec.layout_of(x.dtype)
+    d = codec.xor_delta(x, base)
+    exp, lo = codec.split_planes(d)
+    packed = pack_exponents(exp, width=width, block=block, exc_frac=exc_frac)
+    lo_plane = pack_delta_plane(lo.astype(jnp.uint32), lo_width,
+                                exc_frac=exc_frac)
+    return DeltaMessage(lo=lo_plane, exp=packed, dtype_name=lay.name,
+                        shape=tuple(x.shape))
+
+
+def decode_delta(m: DeltaMessage, base: jax.Array) -> jax.Array:
+    """Exact inverse of :func:`encode_delta` given the SAME base version
+    (the sync protocol's invariant — version fencing guarantees it)."""
+    lay = codec.LAYOUTS[m.dtype_name]
+    n = int(np.prod(m.shape)) if m.shape else 1
+    lo = unpack_delta_plane(m.lo)[:n].astype(lay.uint_dtype)
+    exp = unpack_exponents(m.exp)
+    delta = codec.merge_planes(exp, lo, lay.dtype, m.shape)
+    return codec.xor_delta(delta, base.reshape(m.shape))

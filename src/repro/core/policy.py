@@ -68,6 +68,21 @@ class CompressionPolicy:
     def width_for(self, tensor_class: str) -> int:
         return self.profile.width_for(tensor_class)
 
+    def delta_widths(self, dtype_name: str) -> tuple:
+        """(exp_width, lo_width) of the XOR-delta wire for ``dtype_name``.
+
+        Profile keys ``"delta"`` / ``"delta_lo"`` override (calibratable,
+        e.g. via ``calibrate.choose_delta_widths``); the defaults target
+        warm deltas — consecutive weight versions one small optimizer step
+        apart, where the exponent-delta plane is almost entirely zero and
+        the lo delta sits in the low mantissa bits.  Part of
+        ``policy_fingerprint`` through ``profile.widths``, so changing them
+        recompiles every wsync plan."""
+        lay = codec.LAYOUTS[dtype_name]
+        w = int(self.profile.widths.get("delta", 2))
+        wl = int(self.profile.widths.get("delta_lo", 4))
+        return (max(1, min(w, lay.exp_bits)), max(1, min(wl, lay.lo_bits)))
+
     @staticmethod
     def disabled() -> "CompressionPolicy":
         return CompressionPolicy(enabled=False)

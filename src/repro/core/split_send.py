@@ -322,6 +322,75 @@ def p2p_dispatch(
     return got, flag
 
 
+def delta_send(
+    x: jax.Array, base: jax.Array, axis_name, perm, *, width: int,
+    lo_width: int, block: int = 512, exc_frac: float = 0.02,
+):
+    """XOR-delta P2P send (weight sync, paper §5.3.1 extended): both ends
+    hold ``base``; only the encoded delta crosses the wire.
+
+    The sender XORs ``x`` against ``base`` and ships the delta through the
+    split+pack wire (``packing.encode_delta``: exponent-delta plane on the
+    standard block packer at ``width``, lo-delta plane width-packed at
+    ``lo_width`` with element-exact exceptions); the receiver decodes and
+    XORs against ITS copy of ``base`` — bit-identical to ``ppermute(x)``
+    whenever the returned flag is 0.  A nonzero flag means the delta did
+    not fit the calibrated widths (exception overflow): the caller must
+    fall back to a full send (``sync/engine.py`` does this automatically;
+    the version protocol guarantees both ends agree on ``base``).
+
+    Replayed by kind-"wsync" CommPlans through the shared
+    :func:`wsync_dispatch` seam with identical arguments."""
+    n = int(np.prod(x.shape))
+    # pad in the uint domain: float concat can quiet sNaN payloads, and the
+    # delta wire's contract is exact down to NaN payload bits
+    xf = codec.pad_flat_bits(x.reshape(-1), block)
+    bf = codec.pad_flat_bits(base.reshape(-1).astype(x.dtype), block)
+    m = packing.encode_delta(xf, bf, width=width, lo_width=lo_width,
+                             block=block, exc_frac=exc_frac)
+    recv = jax.tree.map(lambda a: _permute(a, axis_name, perm), m)
+    itemsize = jnp.dtype(x.dtype).itemsize
+    # the delta encode is the three-pass split-then-pack composition: the
+    # split-plane HBM round-trip is paid (encode_fused=False); the receive
+    # is a pure decode (no reduction follows), so decoded-HBM is 0.
+    record_wire_report(WireReport(
+        name="delta_send", axis=str(axis_name),
+        raw_bytes=int(xf.shape[0]) * itemsize,
+        wire_bytes=m.wire_bytes(),
+        encode_hbm_bytes=encode_hbm_bytes_for(xf.shape[0], itemsize),
+    ))
+    out = packing.decode_delta(recv, bf)
+    flag = recv.overflow
+    return codec.slice_bits(out, 0, n).reshape(x.shape), flag
+
+
+def wsync_dispatch(
+    x: jax.Array, base, axis_name, perm, *, compressed: bool,
+    width: int, delta_width: int, delta_lo_width: int, block: int = 512,
+    exc_frac: float = 0.02, strategy: str = "split_send",
+    fused: bool = True, encode_fused: bool = True,
+    use_pallas: bool | None = None,
+):
+    """Decision-free weight-sync dispatch: one bucket, every schedule
+    choice supplied by the caller (the wsync analogue of
+    :func:`p2p_dispatch`, and the shared seam that makes plan-driven and
+    planless sync bit-identical by construction).
+
+    Routing: a compressed bucket WITH a base version rides
+    :func:`delta_send` at the recorded delta widths; everything else —
+    full sends (no base: first contact, stale ack, epoch fence) and
+    policy-gated raw buckets — funnels through :func:`p2p_dispatch`
+    unchanged."""
+    if compressed and base is not None and delta_width:
+        return delta_send(x, base, axis_name, perm, width=delta_width,
+                          lo_width=delta_lo_width, block=block,
+                          exc_frac=exc_frac)
+    return p2p_dispatch(
+        x, axis_name, perm, compressed=compressed, width=width, block=block,
+        exc_frac=exc_frac, strategy=strategy, fused=fused,
+        encode_fused=encode_fused, use_pallas=use_pallas)
+
+
 def p2p_send(
     x: jax.Array, axis_name, perm, *, policy: CompressionPolicy,
     tensor_class: str = "weight", strategy: str = "split_send",

@@ -11,31 +11,35 @@ shipments (kind kv); ``compile.PLAN_KINDS`` is the authoritative registry
 points remain as references; ``train/step.py``, ``optim/zero1.py``,
 ``optim/fsdp.py`` and the serve engine are plan-driven.
 """
-from repro.sched.cache import (PlanCache, cache_stats, default_cache,
-                               load_plans, save_plans)
+from repro.sched.cache import (PlanCache, cache_info, cache_stats,
+                               default_cache, load_plans, save_plans)
 from repro.sched.compile import (PLAN_KINDS, cached_fsdp_gather_plan,
                                  cached_kv_plan, cached_p2p_plan,
-                                 cached_zero1_plan, compile_all_gather_plan,
+                                 cached_wsync_plan, cached_zero1_plan,
+                                 compile_all_gather_plan,
                                  compile_fsdp_gather_plan, compile_kv_plan,
                                  compile_p2p_plan, compile_psum_plan,
                                  compile_reduce_scatter_plan,
-                                 compile_zero1_plan)
+                                 compile_wsync_plan, compile_zero1_plan)
 from repro.sched.executor import (Zero1Execution, all_gather_with_plan,
                                   execute_kv_transfer, execute_p2p,
-                                  execute_psum, gather_from_plan,
-                                  p2p_send_with_plan, psum_with_plan,
-                                  reduce_scatter_with_plan,
+                                  execute_psum, execute_wsync,
+                                  gather_from_plan, p2p_send_with_plan,
+                                  psum_with_plan, reduce_scatter_with_plan,
+                                  sync_weights_with_plan,
                                   transfer_cache_with_plan)
 from repro.sched.plan import BucketPlan, CommPlan, PhasePair
 
 __all__ = [
     "BucketPlan", "CommPlan", "PLAN_KINDS", "PhasePair", "PlanCache",
-    "Zero1Execution", "all_gather_with_plan", "cache_stats",
+    "Zero1Execution", "all_gather_with_plan", "cache_info", "cache_stats",
     "cached_fsdp_gather_plan", "cached_kv_plan", "cached_p2p_plan",
-    "cached_zero1_plan", "compile_all_gather_plan",
+    "cached_wsync_plan", "cached_zero1_plan", "compile_all_gather_plan",
     "compile_fsdp_gather_plan", "compile_kv_plan", "compile_p2p_plan",
-    "compile_psum_plan", "compile_reduce_scatter_plan", "compile_zero1_plan",
-    "default_cache", "execute_kv_transfer", "execute_p2p", "execute_psum",
-    "gather_from_plan", "load_plans", "p2p_send_with_plan", "psum_with_plan",
-    "reduce_scatter_with_plan", "save_plans", "transfer_cache_with_plan",
+    "compile_psum_plan", "compile_reduce_scatter_plan", "compile_wsync_plan",
+    "compile_zero1_plan", "default_cache", "execute_kv_transfer",
+    "execute_p2p", "execute_psum", "execute_wsync", "gather_from_plan",
+    "load_plans", "p2p_send_with_plan", "psum_with_plan",
+    "reduce_scatter_with_plan", "save_plans", "sync_weights_with_plan",
+    "transfer_cache_with_plan",
 ]

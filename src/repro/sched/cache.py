@@ -10,14 +10,24 @@ re-running the bucketing/width/gating decision logic at trace time.
 
 Hit/miss counters are exposed for tests and ``benchmarks/fig_sched.py``
 (plan-cache hit rate is the benchmark's headline number).
+
+Eviction: the store is an LRU bounded by ``capacity`` (``None`` =
+unbounded).  Long-running sync/serve loops touch an open-ended stream of
+signatures (every new cache shape / weight tree compiles a plan); without
+a bound the process cache grows forever.  The default process cache is
+bounded (``REPRO_PLAN_CACHE_CAP``, default 512 — far above any steady-state
+working set, so eviction only fires on genuine signature churn);
+``cache_info()`` surfaces hits/misses/evictions/size for tests and
+benchmarks.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import os
 import pickle
 import threading
-from typing import Callable
+from typing import Callable, Optional
 
 from repro.sched.plan import CommPlan
 
@@ -26,6 +36,7 @@ from repro.sched.plan import CommPlan
 class CacheStats:
     hits: int = 0
     misses: int = 0
+    evictions: int = 0
 
     @property
     def compiles(self) -> int:
@@ -38,18 +49,31 @@ class CacheStats:
 
 
 class PlanCache:
-    """Thread-safe keyed plan store with hit/miss accounting."""
+    """Thread-safe keyed LRU plan store with hit/miss/eviction accounting.
 
-    def __init__(self) -> None:
-        self._plans: dict = {}
+    ``capacity=None`` disables eviction (the pre-bound behaviour); a
+    positive capacity evicts the least-recently-USED entry (hits refresh
+    recency) when an insert would exceed it."""
+
+    def __init__(self, capacity: Optional[int] = None) -> None:
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be >= 1 or None, got {capacity}")
+        self._plans: collections.OrderedDict = collections.OrderedDict()
         self._lock = threading.Lock()
+        self.capacity = capacity
         self.stats = CacheStats()
+
+    def _evict_over_capacity_locked(self) -> None:
+        while self.capacity is not None and len(self._plans) > self.capacity:
+            self._plans.popitem(last=False)
+            self.stats.evictions += 1
 
     def get_or_compile(self, key: tuple, builder: Callable[[], CommPlan]) -> CommPlan:
         """Return the plan for ``key``, compiling (and storing) on miss."""
         with self._lock:
             plan = self._plans.get(key)
             if plan is not None:
+                self._plans.move_to_end(key)
                 self.stats.hits += 1
                 return plan
         # compile outside the lock: builders are pure and idempotent, so a
@@ -57,8 +81,22 @@ class PlanCache:
         plan = builder()
         with self._lock:
             self._plans.setdefault(key, plan)
+            self._plans.move_to_end(key)
             self.stats.misses += 1
+            self._evict_over_capacity_locked()
         return plan
+
+    def cache_info(self) -> dict:
+        """Counter surface: hits/misses/evictions/size/capacity/hit_rate."""
+        with self._lock:
+            return {
+                "hits": self.stats.hits,
+                "misses": self.stats.misses,
+                "evictions": self.stats.evictions,
+                "size": len(self._plans),
+                "capacity": self.capacity,
+                "hit_rate": self.stats.hit_rate,
+            }
 
     def __len__(self) -> int:
         return len(self._plans)
@@ -128,14 +166,17 @@ def load_plans(path: str, cache: "PlanCache" = None, *,
             if plan.key not in cache._plans:
                 cache._plans[plan.key] = plan
                 loaded += 1
+        cache._evict_over_capacity_locked()
     return loaded
 
 
-# The process-default cache: train/step, zero1, fsdp and the planless thin
-# wrappers all share it, so a step re-trace with an unchanged signature is
-# a guaranteed hit.  Tests construct private PlanCache instances instead of
-# clearing this one.
-_DEFAULT = PlanCache()
+# The process-default cache: train/step, zero1, fsdp, serve and the sync
+# engine all share it, so a step re-trace / re-publish with an unchanged
+# signature is a guaranteed hit.  Bounded (LRU) so signature churn in
+# long-running loops cannot leak; tests construct private PlanCache
+# instances instead of clearing this one.
+_DEFAULT = PlanCache(capacity=int(os.environ.get("REPRO_PLAN_CACHE_CAP",
+                                                 "512")))
 
 
 def default_cache() -> PlanCache:
@@ -144,3 +185,8 @@ def default_cache() -> PlanCache:
 
 def cache_stats() -> CacheStats:
     return _DEFAULT.stats
+
+
+def cache_info() -> dict:
+    """``cache_info()`` of the process-default plan cache."""
+    return _DEFAULT.cache_info()

@@ -26,6 +26,7 @@ bucket, recording the estimated escape rate / ratio / entropy floor in
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
@@ -536,6 +537,82 @@ def kv_plan_key(cache, axis_name, policy, strategy: str, n_dev: int) -> tuple:
 
 
 # ---------------------------------------------------------------------------
+# weight sync: the versioned trainer->replica broadcast compiled into the IR
+# (paper §5.3.1, the RL weight-sync workload) — per-dtype leaf buckets with
+# XOR-delta-vs-full gating and both wires' widths/bytes recorded per bucket
+# ---------------------------------------------------------------------------
+
+def delta_wire_bytes(n_padded: int, dtype, *, width: int, lo_width: int,
+                     block: int, exc_frac: float) -> int:
+    """Static wire size of ONE XOR-delta message of ``n_padded``
+    (block-padded) elements: eval_shape over the real delta encoder
+    (``packing.encode_delta``), so this IS the wire ``delta_send`` ships."""
+    from repro.core import packing
+
+    struct = jax.ShapeDtypeStruct((n_padded,), jnp.dtype(dtype))
+    m = jax.eval_shape(
+        partial(packing.encode_delta, width=width, lo_width=lo_width,
+                block=block, exc_frac=exc_frac),
+        struct, struct)
+    return sum(int(np.prod(v.shape)) * jnp.dtype(v.dtype).itemsize
+               for v in jax.tree_util.tree_leaves(m))
+
+
+def compile_wsync_plan(tree, axis_name, *, policy, n_dev: int,
+                       strategy: str = "split_send",
+                       key: tuple = None) -> CommPlan:
+    """Compile a weight-sync broadcast schedule (kind "wsync").
+
+    Mirrors ``sync/wire.sync_weights`` bit-for-bit: codec-supported leaves
+    fuse into one flat bucket per dtype (``_group_leaves``, the psum rule),
+    each gated/width'd like a ``p2p_send`` of the concatenated bucket at
+    tensor_class "weight", PLUS the XOR-delta schedule — the delta codec
+    widths (``policy.delta_widths``) and the expected delta wire bytes —
+    recorded per compressed bucket.  Delta-vs-full is a RUNTIME choice per
+    receiver (does the receiver hold an acked, epoch-current base
+    version?); the plan records the schedule of BOTH paths so neither
+    re-derives anything.  ``tree`` may hold arrays or ShapeDtypeStructs.
+    The executor replays it through ``split_send.wsync_dispatch``
+    (``sched/executor.sync_weights_with_plan``)."""
+    if strategy not in P2P_STRATEGIES:
+        raise ValueError(f"unknown P2P strategy {strategy!r}")
+    backend, use_pallas = probe_backend()
+    axis = axis_tuple(axis_name)
+    leaves, _ = jax.tree_util.tree_flatten(tree)
+    groups, raw_ix = _group_leaves(leaves)
+    buckets = []
+    for name in sorted(groups):
+        members = tuple(groups[name])
+        L = sum(m[2] for m in members)
+        bucket = _p2p_bucket(L, name, axis_name, policy=policy, n_dev=n_dev,
+                             tensor_class="weight", strategy=strategy)
+        bucket = _with_members(bucket, members)
+        if bucket.path == PATH_COMPRESSED:
+            w_d, w_lo = policy.delta_widths(name)
+            dt = codec.LAYOUTS[name].dtype
+            padded = _pad_up(L, policy.profile.block)
+            bucket = dataclasses.replace(
+                bucket, delta_width=w_d, delta_lo_width=w_lo,
+                delta_wire_bytes=delta_wire_bytes(
+                    padded, dt, width=w_d, lo_width=w_lo,
+                    block=policy.profile.block,
+                    exc_frac=policy.profile.exc_frac))
+        buckets.append(bucket)
+    if key is None:
+        key = wsync_plan_key(tree, axis_name, policy, strategy, n_dev)
+    return CommPlan(key=key, kind="wsync", axis=axis, n_dev=n_dev,
+                    backend=backend, use_pallas=use_pallas,
+                    buckets=tuple(buckets), raw_leaf_ix=raw_ix,
+                    n_leaves=len(leaves), strategy=strategy)
+
+
+def wsync_plan_key(tree, axis_name, policy, strategy: str, n_dev: int) -> tuple:
+    return ("wsync", tree_signature(tree), str(strategy),
+            axis_tuple(axis_name), int(n_dev),
+            policy_fingerprint(policy, "weight"), probe_backend())
+
+
+# ---------------------------------------------------------------------------
 # cached compile helpers (the step builders' entry points)
 # ---------------------------------------------------------------------------
 
@@ -577,6 +654,22 @@ def cached_p2p_plan(x, axis_name, *, policy, n_dev: int,
             tensor_class=tensor_class, strategy=strategy, key=key))
 
 
+def cached_wsync_plan(tree, axis_name, *, policy, n_dev: int,
+                      strategy: str = "split_send", cache=None):
+    """Keyed-cache wrapper for :func:`compile_wsync_plan` — the sync
+    engine's entry point (a stable weight-tree signature hits the cached
+    schedule on every publish after the first; zero re-derived decisions
+    per broadcast)."""
+    from repro.sched.cache import default_cache
+
+    cache = default_cache() if cache is None else cache
+    key = wsync_plan_key(tree, axis_name, policy, strategy, n_dev)
+    return cache.get_or_compile(
+        key, lambda: compile_wsync_plan(
+            tree, axis_name, policy=policy, n_dev=n_dev, strategy=strategy,
+            key=key))
+
+
 def cached_kv_plan(cache, axis_name, *, policy, n_dev: int,
                    strategy: str = "split_send", plan_cache=None):
     """Keyed-cache wrapper for :func:`compile_kv_plan` — the serve engine's
@@ -608,4 +701,5 @@ PLAN_KINDS = {
     "fsdp_gather": compile_fsdp_gather_plan,
     "p2p": compile_p2p_plan,
     "kv": compile_kv_plan,
+    "wsync": compile_wsync_plan,
 }

@@ -25,6 +25,9 @@ Entry points:
     of ``core/split_send.p2p_send``, kind "p2p")
   * ``transfer_cache_with_plan``  — KV-cache pytree shipment (the plan
     twin of ``serve/kv_transfer.transfer_cache``, kind "kv")
+  * ``sync_weights_with_plan``    — versioned weight broadcast with
+    XOR-delta-vs-full routing (the plan twin of
+    ``sync/wire.sync_weights``, kind "wsync")
 """
 from __future__ import annotations
 
@@ -406,6 +409,93 @@ def transfer_cache_with_plan(cache, axis_name, perm, *, policy=None,
                 cache, axis_name, policy=policy, n_dev=n_dev,
                 strategy=strategy, key=key))
     return execute_kv_transfer(plan, cache, axis_name, perm)
+
+
+# ---------------------------------------------------------------------------
+# weight sync (kind "wsync"): versioned trainer->replica broadcast with
+# per-bucket XOR-delta-vs-full routing
+# ---------------------------------------------------------------------------
+
+def execute_wsync(plan: CommPlan, tree, axis_name, perm, *, base=None):
+    """Run a compiled kind-"wsync" plan on a concrete weight pytree.
+
+    Bit-identical to ``sync/wire.sync_weights(tree, ..., base=base)`` for
+    the (policy, strategy) the plan was compiled from: both routes call
+    ``split_send.wsync_dispatch`` with the same arguments.  ``base`` is
+    the receiver-acked weight version both ends hold — ``None`` broadcasts
+    full tensors (first contact / stale ack / epoch fence), a pytree of
+    ``tree``'s structure ships XOR deltas on every delta-eligible bucket.
+    Returns (tree_at_dest, flag); a nonzero flag on a delta execution
+    means exception overflow — the caller must retry full.  Emits ONE
+    consolidated ``plan:wsync`` WireReport."""
+    from repro.core import codec
+    from repro.core.compressed_collectives import raw_ppermute
+    from repro.core.split_send import wsync_dispatch
+
+    assert plan.kind == "wsync", plan.kind
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    assert len(leaves) == plan.n_leaves, (len(leaves), plan.n_leaves)
+    base_leaves = None
+    if base is not None:
+        base_leaves, base_def = jax.tree_util.tree_flatten(base)
+        assert base_def == treedef, "base tree structure != weight tree"
+    for b in plan.buckets:  # a stale plan must fail loudly, not mis-scatter
+        for i, shape, _ in b.members:
+            assert tuple(leaves[i].shape) == tuple(shape) and \
+                jnp.dtype(leaves[i].dtype).name == b.dtype_name, (
+                    f"weight leaf {i} is {leaves[i].shape}/"
+                    f"{jnp.dtype(leaves[i].dtype).name} but the plan "
+                    f"recorded {shape}/{b.dtype_name}")
+    out = list(leaves)
+    flag = jnp.int32(0)
+    with capture_wire_reports() as caught:
+        for b in plan.buckets:
+            bucket = codec.concat_members(leaves, b.members)
+            bucket_base = (codec.concat_members(base_leaves, b.members)
+                           if base_leaves is not None else None)
+            got, f = wsync_dispatch(
+                bucket, bucket_base, axis_name, perm,
+                compressed=b.path == PATH_COMPRESSED, width=b.width,
+                delta_width=b.delta_width, delta_lo_width=b.delta_lo_width,
+                block=b.block, exc_frac=b.exc_frac, strategy=plan.strategy,
+                fused=b.fused, encode_fused=b.encode_fused,
+                use_pallas=plan.use_pallas)
+            flag = jnp.maximum(flag, f)
+            for i, leaf in codec.split_members(got, b.members):
+                out[i] = leaf
+        for i in plan.raw_leaf_ix:
+            out[i] = raw_ppermute(
+                leaves[i][None] if leaves[i].ndim == 0 else leaves[i],
+                axis_name, perm)
+            if leaves[i].ndim == 0:
+                out[i] = out[i][0]
+    _emit(plan, caught)
+    return jax.tree_util.tree_unflatten(treedef, out), flag
+
+
+def sync_weights_with_plan(tree, axis_name, perm, *, policy=None, base=None,
+                           strategy: str = "split_send",
+                           plan: CommPlan = None, cache: PlanCache = None):
+    """Plan-driven weight sync (the cached thin wrapper over
+    ``execute_wsync``).
+
+    With ``plan=None`` the plan is looked up by the weight pytree's
+    signature in the keyed plan cache — a trainer publishing a
+    signature-stable tree hits the cached schedule on every broadcast
+    after the first.  Bit-identical to the planless
+    ``sync/wire.sync_weights``."""
+    if plan is None:
+        assert policy is not None, \
+            "sync_weights_with_plan needs policy= or plan="
+        n_dev = _axis_size(axis_name)
+        cache = default_cache() if cache is None else cache
+        key = sched_compile.wsync_plan_key(tree, axis_name, policy, strategy,
+                                           n_dev)
+        plan = cache.get_or_compile(
+            key, lambda: sched_compile.compile_wsync_plan(
+                tree, axis_name, policy=policy, n_dev=n_dev,
+                strategy=strategy, key=key))
+    return execute_wsync(plan, tree, axis_name, perm, base=base)
 
 
 # ---------------------------------------------------------------------------

@@ -75,6 +75,13 @@ class BucketPlan:
     chunk: int = 0  # per-device chunk length after padding
     wire_bytes: int = 0  # expected compressed wire bytes per execution
     raw_bytes: int = 0  # uncompressed bytes the same wires would move
+    # XOR-delta schedule (kind "wsync" only): exponent-delta / lo-delta
+    # codec widths and the expected delta wire bytes.  delta_width == 0
+    # means the bucket is not delta-eligible (raw path, or a non-wsync
+    # kind) and always rides the full send.
+    delta_width: int = 0
+    delta_lo_width: int = 0
+    delta_wire_bytes: int = 0
     # compressibility probe (filled when the compiler calibrated from live
     # data): (est_exc_rate, est_ratio, entropy_bits), else None
     probe: tuple | None = None
@@ -107,9 +114,11 @@ class CommPlan:
     PhasePairs with the optimizer update between), "fsdp_gather"
     (custom-vjp weight gather / gradient RS of one leaf), "p2p" (one
     tensor over the split-send P2P pipeline — replays
-    ``core/split_send.p2p_send``), or "kv" (a KV-cache pytree shipped
+    ``core/split_send.p2p_send``), "kv" (a KV-cache pytree shipped
     leaf-bucketed over the P2P pipeline — replays
-    ``serve/kv_transfer.transfer_cache``).
+    ``serve/kv_transfer.transfer_cache``), or "wsync" (a versioned weight
+    pytree broadcast with per-bucket XOR-delta-vs-full gating — replays
+    ``sync/wire.sync_weights`` through ``split_send.wsync_dispatch``).
 
     ``backend``/``use_pallas`` record the probed kernel dispatch at compile
     time (``repro.kernels.backend()``): a plan documents exactly which
@@ -148,6 +157,13 @@ class CommPlan:
         return sum(b.raw_bytes for b in self._flat_buckets() if b.compressed)
 
     @property
+    def delta_wire_bytes(self) -> int:
+        """Expected wire bytes of one all-delta execution (kind "wsync"):
+        delta-eligible buckets ship deltas, the rest their full wires."""
+        return sum(b.delta_wire_bytes if b.delta_width else b.wire_bytes
+                   for b in self._flat_buckets() if b.compressed)
+
+    @property
     def ratio(self) -> float:
         return self.wire_bytes / max(self.raw_bytes, 1)
 
@@ -177,9 +193,12 @@ class CommPlan:
             "paths": tuple(b.path for b in self._flat_buckets()),
             "n_encode_fused": sum(1 for b in self._flat_buckets()
                                   if b.compressed and b.encode_fused),
+            "n_delta": sum(1 for b in self._flat_buckets()
+                           if b.compressed and b.delta_width),
             "wire_bytes": self.wire_bytes,
             "raw_bytes": self.raw_bytes,
             "ratio": self.ratio,
+            "delta_wire_bytes": self.delta_wire_bytes,
         }
 
 

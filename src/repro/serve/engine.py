@@ -20,6 +20,11 @@ decode slots, each holding one request's cache position; finished slots are
 refilled from the queue without stopping the decode loop (static shapes —
 the compiled decode step never re-specializes, and the admission cache
 signature stays plan-cache-stable).
+
+Weight-sync ingestion (``ingest_weights``): a running engine hot-swaps its
+params from a ``sync.WeightSyncEngine`` update stream — full updates apply
+unconditionally, XOR-delta updates are version/epoch-fenced against the
+engine's current weights (src/repro/sync/, the paper's §5.3.1 workload).
 """
 from __future__ import annotations
 
@@ -112,6 +117,42 @@ class ServeEngine:
         self.queue: list = []
         self.finished: list = []
         self._key = jax.random.PRNGKey(0)
+        # weight-sync ingestion state (None until the first ingest): the
+        # version/epoch of self.params under the sync protocol
+        self.weight_version: Optional[int] = None
+        self.weight_epoch: Optional[int] = None
+
+    # -- weight-sync ingestion -----------------------------------------------
+
+    def ingest_weights(self, update) -> int:
+        """Hot-swap ``self.params`` from a weight-sync stream.
+
+        ``update`` is a ``sync.SyncUpdate`` (trainer-side
+        ``WeightSyncEngine.update_for``).  Full updates apply
+        unconditionally and adopt the stream's epoch; delta updates are
+        FENCED — they only apply when this engine's (version, epoch)
+        matches the update's base exactly, since XOR reconstruction
+        against any other bits would be garbage.  A fencing violation
+        raises (the sender consults acks, so it means a protocol bug or a
+        lost ack — the caller should re-request a full send).  Decode
+        shapes are unchanged, so the jitted prefill/decode steps never
+        re-specialize.  Returns the new version."""
+        from repro.sync.engine import apply_update
+
+        if update.base_version is not None:
+            if (update.base_version != self.weight_version
+                    or update.epoch != self.weight_epoch):
+                raise ValueError(
+                    f"delta update v{update.version} assumes base "
+                    f"v{update.base_version}@e{update.epoch} but this engine "
+                    f"holds v{self.weight_version}@e{self.weight_epoch}; "
+                    f"request a full send")
+            self.params = apply_update(update, base_params=self.params)
+        else:
+            self.params = apply_update(update)
+        self.weight_version = update.version
+        self.weight_epoch = update.epoch
+        return self.weight_version
 
     # -- admission -----------------------------------------------------------
 

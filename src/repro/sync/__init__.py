@@ -1,0 +1,21 @@
+"""Weight-sync subsystem (paper §5.3.1: RL weight synchronization).
+
+Broadcasts versioned model weights from one trainer to N inference
+replicas over the compressed host/P2P wire, with a lossless XOR-delta
+transform against the receiver's acked base version (``core/codec.
+xor_delta`` + the split+pack delta wire in ``core/packing.py``) and
+automatic fallback to full-tensor sends when the base is stale, absent,
+or epoch-fenced.  The schedule compiles ONCE into a kind-"wsync"
+``CommPlan`` (``sched/compile.compile_wsync_plan``) and is replayed by
+``sched.sync_weights_with_plan`` (in-mesh) or :class:`WeightSyncEngine`
+(host path) — bit-identical to the planless ``sync/wire.sync_weights``
+by construction.  ``serve/engine.ServeEngine.ingest_weights`` hot-swaps
+a running decode loop from the stream; ``train/step.make_publish_hook``
+bridges the trainer side.
+"""
+from repro.sync.engine import (SyncUpdate, WeightSyncEngine, apply_update)
+from repro.sync.store import VersionedStore
+from repro.sync.wire import sync_weights
+
+__all__ = ["SyncUpdate", "VersionedStore", "WeightSyncEngine",
+           "apply_update", "sync_weights"]

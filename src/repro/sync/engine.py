@@ -1,0 +1,243 @@
+"""Host-path weight-sync engine: one trainer, N inference replicas.
+
+The paper's headline P2P workload (§5.3.1, Fig. 10) is RL weight
+synchronization — the trainer pushes updated policy weights to rollout /
+inference workers every iteration.  ``WeightSyncEngine`` owns that
+workload end to end on the host path (out-of-band, separate-process
+replicas; the in-mesh twin is ``sync/wire.sync_weights`` /
+``sched.sync_weights_with_plan``):
+
+  * the schedule — per-dtype leaf buckets, compress-vs-raw gates, full and
+    XOR-delta codec widths, expected wire bytes — comes from a compiled
+    kind-"wsync" ``CommPlan`` cached on the weight tree's signature: the
+    first publish compiles it, every later publish is a plan-cache hit
+    (zero re-derived decisions per broadcast);
+  * version bookkeeping (``sync/store.VersionedStore``) decides delta-vs-
+    full per replica: deltas are sent against the replica's acked version
+    when the trainer still retains it AND the ack is epoch-current;
+    otherwise (late joiner, pruned history, post-restart fence) the full
+    tensors go out;
+  * losslessness is unconditional: a delta whose exceptions overflow the
+    calibrated widths falls back to a full encode of that bucket before
+    anything ships, and every path reconstructs bit-identically —
+    including NaN/Inf payloads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codec, packing
+from repro.core.policy import CompressionPolicy
+from repro.sched.plan import PATH_COMPRESSED
+from repro.sync.store import VersionedStore
+
+MODE_DELTA = "delta"
+MODE_FULL = "full"
+MODE_RAW = "raw"
+
+
+def _raw_wire(bucket, dtype_name):
+    """Raw bucket -> wire ndarray.  Codec float dtypes travel as their
+    uint bit patterns: converting sub-f32 floats through host numpy can
+    canonicalize signaling-NaN payloads, and the raw path must be just as
+    bit-exact as the coded ones (the host twin of the collectives'
+    ``_to_wire`` bitcast)."""
+    lay = codec.LAYOUTS.get(dtype_name)
+    if lay is None:
+        return np.asarray(bucket)
+    return np.asarray(jax.lax.bitcast_convert_type(bucket, lay.uint_dtype))
+
+
+def _raw_unwire(msg, dtype_name):
+    lay = codec.LAYOUTS.get(dtype_name)
+    if lay is None:
+        return jnp.asarray(msg)
+    return jax.lax.bitcast_convert_type(jnp.asarray(msg), lay.dtype)
+
+
+@dataclasses.dataclass
+class SyncUpdate:
+    """One encoded trainer->replica weight shipment.
+
+    ``base_version`` is None for a pure full send; otherwise every
+    ``MODE_DELTA`` bucket must be decoded against that version's bits (the
+    receiver's current weights — ``apply_update(base_params=...)``).
+    ``buckets`` carry (dtype_name, members, mode, message) per plan
+    bucket; ``raw_leaves`` the codec-unsupported leaves."""
+
+    version: int
+    epoch: int
+    base_version: Optional[int]
+    treedef: Any
+    n_leaves: int
+    buckets: tuple  # ((dtype_name, members, mode, message), ...)
+    raw_leaves: tuple  # ((leaf_index, ndarray), ...)
+    wire_bytes: int
+    raw_bytes: int
+
+    @property
+    def mode(self) -> str:
+        """"delta" if any bucket shipped a delta, else "full"."""
+        return (MODE_DELTA if any(m == MODE_DELTA for _, _, m, _ in
+                                  self.buckets) else MODE_FULL)
+
+    @property
+    def ratio(self) -> float:
+        return self.wire_bytes / max(self.raw_bytes, 1)
+
+
+def apply_update(update: SyncUpdate, base_params=None):
+    """Reconstruct the published weights from a :class:`SyncUpdate`.
+
+    Bit-identical to the trainer's published tree.  ``base_params`` (the
+    receiver's weights at ``update.base_version``) is required iff the
+    update carries delta buckets."""
+    leaves: list = [None] * update.n_leaves
+    base_leaves = None
+    if base_params is not None:
+        base_leaves = jax.tree_util.tree_flatten(base_params)[0]
+    for dtype_name, members, mode, msg in update.buckets:
+        if mode == MODE_DELTA:
+            if base_leaves is None:
+                raise ValueError(
+                    f"update v{update.version} deltas against "
+                    f"v{update.base_version}; apply_update needs "
+                    f"base_params")
+            base_bucket = codec.pad_flat_bits(
+                codec.concat_members(base_leaves, members),
+                int(np.prod(msg.shape)))
+            got = packing.decode_delta(msg, base_bucket)
+        elif mode == MODE_FULL:
+            got = packing.decode_message(msg)
+        else:
+            got = _raw_unwire(msg, dtype_name)
+        for i, leaf in codec.split_members(got, members):
+            leaves[i] = leaf
+    for i, arr in update.raw_leaves:
+        leaves[i] = jnp.asarray(arr)
+    return jax.tree_util.tree_unflatten(update.treedef, leaves)
+
+
+class WeightSyncEngine:
+    """Trainer-side broadcast engine with versioned XOR-delta encoding."""
+
+    def __init__(self, *, policy: CompressionPolicy = None,
+                 axis_name: str = "data", strategy: str = "split_send",
+                 history: int = 4, plan_cache=None) -> None:
+        self.policy = CompressionPolicy() if policy is None else policy
+        self.axis_name = axis_name
+        self.strategy = strategy
+        self.store = VersionedStore(history=history)
+        self.plan_cache = plan_cache
+        # encoded updates of the LATEST version, keyed by base_version:
+        # replicas that acked the same base receive byte-identical updates,
+        # so broadcasting to N replicas encodes once, not N times
+        self._updates: dict = {}
+
+    # -- trainer side --------------------------------------------------------
+
+    def publish(self, params) -> int:
+        """Retain ``params`` as the next weight version (the train-step
+        publish hook's target — ``train/step.make_publish_hook``)."""
+        self._updates.clear()  # encoded updates are per-version
+        return self.store.publish(params)
+
+    def plan_for(self, params):
+        """The cached kind-"wsync" CommPlan of ``params``' signature."""
+        from repro import sched
+
+        return sched.cached_wsync_plan(
+            params, self.axis_name, policy=self.policy, n_dev=1,
+            strategy=self.strategy, cache=self.plan_cache)
+
+    def update_for(self, replica) -> SyncUpdate:
+        """Encode the latest version for ``replica``: XOR delta against its
+        acked base when possible (a replica that is already current gets
+        the all-zero delta — far cheaper than a full re-send), full
+        otherwise (stale/absent/fenced ack, raw-gated buckets, or
+        per-bucket delta overflow).  Updates are memoized per (latest
+        version, base version): broadcasting to N replicas with the same
+        ack encodes once."""
+        params, version = self.store.latest()
+        base_version = self.store.base_for(replica)
+        cached = self._updates.get(base_version)
+        if cached is not None:
+            return cached
+        update = self._encode_update(params, version, base_version)
+        self._updates[base_version] = update
+        return update
+
+    def _encode_update(self, params, version: int,
+                       base_version) -> SyncUpdate:
+        base = self.store.get(base_version) if base_version is not None \
+            else None
+        plan = self.plan_for(params)
+        leaves = jax.tree_util.tree_flatten(params)[0]
+        base_leaves = (jax.tree_util.tree_flatten(base)[0]
+                       if base is not None else None)
+        buckets = []
+        wire = 0
+        used_delta = False
+        for b in plan.buckets:
+            bucket = codec.concat_members(leaves, b.members)
+            mode, msg = MODE_RAW, None
+            if b.path == PATH_COMPRESSED:
+                # pad to the block grid like the in-mesh wire, so the plan's
+                # eval_shape accounting IS this wire's size (and overflow
+                # thresholds match delta_send exactly)
+                bucket = codec.pad_flat_bits(bucket, b.block)
+                if base_leaves is not None and b.delta_width:
+                    base_bucket = codec.pad_flat_bits(
+                        codec.concat_members(base_leaves, b.members), b.block)
+                    m = packing.encode_delta(
+                        bucket, base_bucket, width=b.delta_width,
+                        lo_width=b.delta_lo_width, block=b.block,
+                        exc_frac=b.exc_frac)
+                    if not int(m.overflow):  # else: fall through to full
+                        mode, msg = MODE_DELTA, jax.device_get(m)
+                        wire += m.wire_bytes()
+                        used_delta = True
+                if msg is None:
+                    m = packing.encode_message(
+                        bucket, width=b.width, block=b.block,
+                        exc_frac=b.exc_frac, fused=b.encode_fused)
+                    if int(m.exp.overflow):
+                        # even the full wire's exceptions overflowed
+                        # (pathological exponent spread): ship the bucket
+                        # raw — the host twin of the runtime's
+                        # retry-uncompressed guard.  Never corrupt.
+                        mode, msg = MODE_RAW, _raw_wire(bucket, b.dtype_name)
+                        wire += msg.nbytes
+                    else:
+                        mode, msg = MODE_FULL, jax.device_get(m)
+                        wire += m.wire_bytes()
+            else:
+                msg = _raw_wire(bucket, b.dtype_name)
+                wire += msg.nbytes
+            buckets.append((b.dtype_name, b.members, mode, msg))
+        raw_leaves = tuple((i, np.asarray(leaves[i]))
+                           for i in plan.raw_leaf_ix)
+        wire += sum(arr.nbytes for _, arr in raw_leaves)
+        raw_total = sum(l.size * jnp.dtype(l.dtype).itemsize
+                        for l in leaves if hasattr(l, "dtype"))
+        return SyncUpdate(
+            version=version, epoch=self.store.epoch,
+            base_version=base_version if used_delta else None,
+            treedef=jax.tree_util.tree_structure(params),
+            n_leaves=len(leaves), buckets=tuple(buckets),
+            raw_leaves=raw_leaves, wire_bytes=int(wire),
+            raw_bytes=int(raw_total))
+
+    def ack(self, replica, version: int, epoch: Optional[int] = None) -> bool:
+        """Record a replica's applied version (epoch-fenced)."""
+        return self.store.ack(replica, version, epoch)
+
+    def advance_epoch(self) -> int:
+        """Fence all acks (trainer restart/restore): next sends go full."""
+        self._updates.clear()  # cached updates carry the old epoch
+        return self.store.advance_epoch()

@@ -1,0 +1,111 @@
+"""Version bookkeeping for the weight-sync subsystem.
+
+The XOR-delta wire is only lossless if BOTH ends XOR against the same
+base bits, so the protocol is explicit about who holds what:
+
+  * the trainer ``publish``es monotonically-numbered versions, retaining a
+    bounded history (a replica can only be delta-served against a version
+    the trainer still holds);
+  * each replica ``ack``s the version it has fully applied; the sender
+    deltas against the acked version, or falls back to a FULL send when
+    the ack is absent (late joiner), stale (version pruned from history),
+    or fenced (from a previous epoch);
+  * the ``epoch`` fences restarts: after the trainer restores from a
+    checkpoint (or otherwise rewinds), version numbers may repeat with
+    different bits — ``advance_epoch()`` invalidates every outstanding
+    ack, forcing full sends until replicas re-ack under the new epoch.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Optional
+
+
+def _own_copy(params):
+    """Deep-copy the array leaves: the store must OWN its retained
+    versions — train steps donate their state, so the published buffers
+    may be deleted by the very next optimizer step."""
+    import jax
+
+    return jax.tree.map(
+        lambda l: l.copy() if hasattr(l, "copy") else l, params)
+
+
+class VersionedStore:
+    """Trainer-side version history + per-replica ack table.
+
+    ``copy_on_publish`` (default) snapshots each published tree so later
+    delta encodes never read donated-away buffers; callers that already
+    hand over owned arrays can disable it."""
+
+    def __init__(self, *, history: int = 4,
+                 copy_on_publish: bool = True) -> None:
+        if history < 1:
+            raise ValueError(f"history must be >= 1, got {history}")
+        self.history = history
+        self.copy_on_publish = copy_on_publish
+        self.epoch = 0
+        self._versions: collections.OrderedDict = collections.OrderedDict()
+        self._version = 0
+        self._acks: dict = {}  # replica -> (epoch, version)
+
+    # -- publishing ----------------------------------------------------------
+
+    def publish(self, params) -> int:
+        """Retain ``params`` as the next version; returns its number."""
+        if self.copy_on_publish:
+            params = _own_copy(params)
+        self._version += 1
+        self._versions[self._version] = params
+        while len(self._versions) > self.history:
+            self._versions.popitem(last=False)
+        return self._version
+
+    @property
+    def version(self) -> int:
+        """Latest published version (0 = nothing published yet)."""
+        return self._version
+
+    def latest(self) -> tuple:
+        """(params, version) of the latest publish."""
+        if not self._versions:
+            raise ValueError("nothing published yet")
+        return self._versions[self._version], self._version
+
+    def get(self, version: int):
+        """The retained params of ``version``, or None if pruned/unknown."""
+        return self._versions.get(version)
+
+    def retained(self) -> tuple:
+        return tuple(self._versions)
+
+    # -- acks + fencing ------------------------------------------------------
+
+    def ack(self, replica, version: int, epoch: Optional[int] = None) -> bool:
+        """Record that ``replica`` holds ``version``.  Rejected (False) when
+        the ack is fenced (wrong epoch) or names an impossible version —
+        a rejected ack leaves the previous state untouched."""
+        epoch = self.epoch if epoch is None else epoch
+        if epoch != self.epoch or not (1 <= version <= self._version):
+            return False
+        self._acks[replica] = (epoch, version)
+        return True
+
+    def acked_version(self, replica) -> Optional[int]:
+        """The replica's epoch-current acked version, or None."""
+        a = self._acks.get(replica)
+        return a[1] if a is not None and a[0] == self.epoch else None
+
+    def base_for(self, replica) -> Optional[int]:
+        """The version a delta send to ``replica`` may assume as base:
+        its epoch-current ack, IF that version is still retained.  None
+        mandates a full send."""
+        v = self.acked_version(replica)
+        return v if v is not None and v in self._versions else None
+
+    def advance_epoch(self) -> int:
+        """Fence every outstanding ack (trainer restart / restore): the
+        next send to every replica is forced full."""
+        self.epoch += 1
+        self._acks.clear()
+        return self.epoch

@@ -728,3 +728,28 @@ def _opt_local(opt_state):
 def _opt_global(opt_state):
     """Re-add the leading DP dim for the global layout (inverse of local)."""
     return jax.tree.map(lambda l: l if l.ndim == 0 else l[None], opt_state)
+
+
+# ---------------------------------------------------------------------------
+# weight-sync publish hook (src/repro/sync/): the trainer side of the RL
+# weight-synchronization wire
+# ---------------------------------------------------------------------------
+
+def make_publish_hook(sync_engine, *, every: int = 1):
+    """Bridge the train loop to a ``sync.WeightSyncEngine``.
+
+    Returns ``hook(state) -> version | None``: call it after each
+    optimizer step; every ``every`` steps it publishes ``state["params"]``
+    as the next weight version (the step counter is read from the train
+    state itself, so the cadence survives checkpoint restores).  The
+    published tree's signature is step-stable, so every publish after the
+    first hits the cached kind-"wsync" plan.  After restoring a trainer
+    from a checkpoint, call ``sync_engine.advance_epoch()`` before the
+    first publish — version numbers may repeat with different bits, and
+    the epoch fence forces replicas back through a full send."""
+    def hook(state):
+        step = int(state["step"])
+        if every > 1 and step % every != 0:
+            return None
+        return sync_engine.publish(state["params"])
+    return hook

@@ -427,4 +427,58 @@ def _kv():
                                          jax.tree_util.tree_leaves(want)))
 
 
+# -- 7. weight sync: XOR-delta broadcast + wsync plan parity across 8 devices --
+@section("wsync", ["wsync_full_bitexact", "wsync_delta_bitexact",
+                   "wsync_plan_parity", "wsync_plan_cache_hit"])
+def _wsync():
+    from repro import sched
+    from repro.sync import sync_weights
+
+    tree = {
+        "wq": jnp.asarray(rng.normal(0, 0.02, (1 << 14,)), jnp.bfloat16),
+        "wk": jnp.asarray(rng.normal(0, 0.02, (1 << 13,)), jnp.bfloat16),
+        "norm": jnp.asarray(rng.normal(0, 1, (4096,)), jnp.float32),
+        "step": jnp.asarray(3, jnp.int32),
+    }
+    # next version: sparse low-mantissa-bit XOR (a warm optimizer step)
+    def xor_mask(l, bits_n):
+        if jnp.dtype(l.dtype).name not in ("bfloat16", "float32"):
+            return l
+        u = jnp.uint16 if l.dtype == jnp.bfloat16 else jnp.uint32
+        mask = rng.integers(0, 1 << bits_n, l.shape).astype(np.uint64)
+        mask[rng.random(l.shape) > 0.3] = 0
+        return jax.lax.bitcast_convert_type(
+            jax.lax.bitcast_convert_type(l, u) ^ jnp.asarray(mask, u),
+            l.dtype)
+
+    new = {k: xor_mask(v, 3) for k, v in tree.items()}
+    cache = sched.PlanCache()
+
+    def f(t, b):
+        full, f1 = sync_weights(t, "data", perm, policy=policy)
+        delta, f2 = sync_weights(t, "data", perm, policy=policy, base=b)
+        planned, f3 = sched.sync_weights_with_plan(
+            t, "data", perm, policy=policy, base=b, cache=cache)
+        pfull, f4 = sched.sync_weights_with_plan(
+            t, "data", perm, policy=policy, cache=cache)
+        flag = jnp.maximum(jnp.maximum(f1, f2), jnp.maximum(f3, f4))
+        return full, delta, planned, pfull, flag
+
+    mk = lambda: jax.jit(jax.shard_map(
+        f, mesh=mesh1, in_specs=(P(), P()),
+        out_specs=(P(), P(), P(), P(), P()),
+        axis_names={"data"}, check_vma=False))
+    full, delta, planned, pfull, flag = mk()(new, tree)
+    teq = lambda a, b: all(
+        bits_equal(x, y) for x, y in zip(jax.tree_util.tree_leaves(a),
+                                         jax.tree_util.tree_leaves(b)))
+    res["wsync_full_bitexact"] = teq(full, new) and int(flag) == 0
+    res["wsync_delta_bitexact"] = teq(delta, new)
+    res["wsync_plan_parity"] = teq(planned, delta) and teq(pfull, full)
+    mk()(new, tree)  # fresh jit wrapper: re-trace -> pure plan-cache hits
+    # delta and full replay ONE plan (delta-vs-full is runtime routing)
+    res["wsync_plan_cache_hit"] = (cache.stats.misses == 1
+                                   and cache.stats.hits >= 3)
+
+
 print("RESULT " + json.dumps(res))

@@ -60,7 +60,8 @@ def test_plan_kind_registry_compilers_are_real():
 
 
 _ALIASES = {"sched": "repro.sched", "core": "repro.core",
-            "optim": "repro.optim", "serve": "repro.serve"}
+            "optim": "repro.optim", "serve": "repro.serve",
+            "sync": "repro.sync"}
 
 
 @pytest.mark.parametrize("column", [2, 3], ids=["replayed_by", "planless"])

@@ -139,3 +139,17 @@ def test_kv_plan_bitexact():
     """transfer_cache_with_plan == transfer_cache bit-for-bit on a real
     prefilled KV cache across 8 devices."""
     assert get("kv_plan_bitexact")
+
+
+def test_wsync_broadcast_bitexact():
+    """Weight broadcast across 8 devices: full and XOR-delta paths both
+    reconstruct the published tree bit-identically."""
+    assert get("wsync_full_bitexact")
+    assert get("wsync_delta_bitexact")
+
+
+def test_wsync_plan_parity_and_cache():
+    """sync_weights_with_plan == sync_weights bit-for-bit on 8 devices;
+    delta and full replay one cached plan (one compile, rest hits)."""
+    assert get("wsync_plan_parity")
+    assert get("wsync_plan_cache_hit")

@@ -69,6 +69,63 @@ def _shmap(fn, mesh, n_in=1, n_out=2):
 # cache semantics
 # ---------------------------------------------------------------------------
 
+def test_cache_lru_eviction_and_info():
+    """Bounded cache: LRU eviction at capacity, hits refresh recency, and
+    cache_info() exposes the full counter surface."""
+    cache = sched.PlanCache(capacity=2)
+    mk = lambda k: cache.get_or_compile(("k", k), lambda: f"plan-{k}")
+    mk(1), mk(2)
+    assert len(cache) == 2 and cache.stats.evictions == 0
+    mk(1)  # refresh 1: now 2 is least-recently-used
+    mk(3)  # evicts 2
+    assert cache.stats.evictions == 1
+    assert ("k", 1) in cache and ("k", 3) in cache and ("k", 2) not in cache
+    mk(2)  # recompiles (2 was evicted), evicts 1 (LRU after 3's insert? no:
+    #        order is [1, 3] -> inserting 2 evicts 1)
+    assert ("k", 1) not in cache
+    info = cache.cache_info()
+    assert info == {"hits": 1, "misses": 4, "evictions": 2, "size": 2,
+                    "capacity": 2, "hit_rate": 0.2}
+    cache.clear()
+    assert cache.cache_info()["evictions"] == 0 and len(cache) == 0
+
+
+def test_cache_unbounded_and_capacity_validation():
+    cache = sched.PlanCache()  # capacity=None: never evicts
+    for k in range(64):
+        cache.get_or_compile(("k", k), lambda k=k: k)
+    assert len(cache) == 64 and cache.stats.evictions == 0
+    with pytest.raises(ValueError):
+        sched.PlanCache(capacity=0)
+
+
+def test_default_cache_is_bounded():
+    """Long-running sync/serve loops must not leak plans: the process
+    cache carries a finite LRU capacity (REPRO_PLAN_CACHE_CAP)."""
+    info = sched.cache_info()
+    assert info["capacity"] is not None and info["capacity"] >= 1
+    assert set(info) == {"hits", "misses", "evictions", "size", "capacity",
+                         "hit_rate"}
+
+
+def test_load_plans_respects_capacity(tmp_path):
+    """Persistence + LRU compose: loading more plans than capacity holds
+    keeps the cache at its bound (oldest inserts evicted)."""
+    pol = CompressionPolicy(min_bytes=0)
+    src = sched.PlanCache()
+    for n in (1024, 2048, 4096):
+        x = jax.ShapeDtypeStruct((n,), jnp.bfloat16)
+        key = sched_compile.p2p_plan_key((n,), "bfloat16", "data", pol,
+                                         "weight", "split_send", 1)
+        src.get_or_compile(key, lambda x=x, key=key: sched.compile_p2p_plan(
+            x, "data", policy=pol, n_dev=1, key=key))
+    path = str(tmp_path / "plans.pkl")
+    assert sched.save_plans(path, src) == 3
+    small = sched.PlanCache(capacity=2)
+    assert sched.load_plans(path, small) == 3  # inserted, then bounded
+    assert len(small) == 2 and small.stats.evictions == 1
+
+
 def test_cache_hit_same_signature_miss_on_change():
     pol = CompressionPolicy(min_bytes=0)
     cache = sched.PlanCache()
