@@ -1,11 +1,17 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig7,fig9]
+    PYTHONPATH=src python -m benchmarks.run [--only fig7,fig9] [--json out.json]
+
+``--json`` additionally writes a machine-readable summary (per-module wall
+time / pass-fail / fallback counts, plus the obs metrics snapshot) without
+changing anything on stdout — CI diffs the file, humans read the console.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
+import os
 import sys
 import time
 import traceback
@@ -25,6 +31,7 @@ MODULES = [
     ("sched", "benchmarks.fig_sched"),
     ("encode", "benchmarks.fig_encode"),
     ("sync", "benchmarks.fig_sync"),
+    ("obs", "repro.obs.dump"),
 ]
 
 
@@ -32,13 +39,16 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated keys, e.g. fig7,fig9")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a machine-readable run summary to PATH")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from repro import kernels
+    from repro import kernels, obs
 
     failures = []
     total: dict = {}
+    modules_out = []
     for key, modname in MODULES:
         if only and key not in only:
             continue
@@ -47,11 +57,13 @@ def main():
         # benchmark that actually degraded, not accumulate across figs (the
         # once-per-op warning also re-arms, so each module logs its own).
         kernels.clear_fallbacks()
+        ok = True
         try:
             mod = importlib.import_module(modname)
             mod.run()
             print(f"  [{key} done in {time.time()-t0:.1f}s]")
         except Exception:
+            ok = False
             failures.append(key)
             print(f"  [{key} FAILED]")
             traceback.print_exc()
@@ -63,9 +75,23 @@ def main():
             print(f"  [{key} kernel fast-path fallbacks: {per_module}]")
         for op, c in per_module.items():
             total[op] = total.get(op, 0) + c
+        modules_out.append({"key": key, "module": modname, "ok": ok,
+                            "wall_s": round(time.time() - t0, 3),
+                            "fallbacks": per_module})
     print(f"\nkernel fast-path fallbacks (all benchmarks): "
           f"{total if total else 'none'}")
     print(f"{'ALL BENCHMARKS PASSED' if not failures else 'FAILED: ' + ', '.join(failures)}")
+    if args.json:
+        summary = {
+            "modules": modules_out,
+            "failures": failures,
+            "fallbacks_total": total,
+            "obs": obs.snapshot(),
+        }
+        path = os.path.abspath(args.json)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(summary, f, indent=2, sort_keys=True)
     sys.exit(1 if failures else 0)
 
 

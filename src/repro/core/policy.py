@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import threading
 from typing import Sequence
 
 import jax
@@ -136,13 +137,26 @@ class WireReport:
 # pushes a capture list around a plan execution so the per-wire reports of
 # its buckets can be folded into ONE consolidated report (see
 # ``capture_wire_reports``); everything else records into the base list.
+#
+# The STACK is thread-local (the base list is shared): threaded serve/sync
+# loops trace plans concurrently, and a ``capture_wire_reports`` opened in
+# one thread must not swallow reports recorded from another — each thread
+# redirects only its own recordings, while uncaptured reports from every
+# thread still land in the shared base list (list.append is atomic).
 _WIRE_REPORTS: list = []
-_SINKS: list = [_WIRE_REPORTS]
+_SINK_STACKS = threading.local()
+
+
+def _sinks() -> list:
+    stack = getattr(_SINK_STACKS, "stack", None)
+    if stack is None:
+        stack = _SINK_STACKS.stack = [_WIRE_REPORTS]
+    return stack
 
 
 def record_wire_report(report: WireReport) -> None:
     """Append a trace-time accounting record (called by the collectives)."""
-    _SINKS[-1].append(report)
+    _sinks()[-1].append(report)
 
 
 def clear_wire_reports() -> None:
@@ -160,11 +174,15 @@ def capture_wire_reports():
 
     Used by the sched executor (``sched/executor.py``) to aggregate every
     wire a plan execution drives into one consolidated WireReport instead
-    of N per-bucket records.  Nestable; reports recorded inside do NOT
-    reach the global sink unless re-recorded by the caller."""
+    of N per-bucket records.  Nestable, and scoped to the CALLING thread:
+    other threads' recordings keep flowing to their own sinks (ultimately
+    the shared base list), so concurrent captures cannot steal each
+    other's reports.  Reports recorded inside do NOT reach the global sink
+    unless re-recorded by the caller."""
     sink: list = []
-    _SINKS.append(sink)
+    stack = _sinks()
+    stack.append(sink)
     try:
         yield sink
     finally:
-        _SINKS.pop()
+        stack.pop()

@@ -23,6 +23,8 @@ import os
 
 import jax
 
+from repro import obs
+
 _TRUTHY = ("1", "true", "True", "yes", "on")
 
 _logger = logging.getLogger("repro.kernels")
@@ -45,6 +47,7 @@ _FALLBACK_WARNED: set = set()
 def record_fallback(op: str, reason: str) -> None:
     """Count (and log once per op) a fast-path dispatch degrade."""
     _FALLBACKS[op] = _FALLBACKS.get(op, 0) + 1
+    obs.metric("kernel_fallback_total").inc(op=op)
     if op not in _FALLBACK_WARNED:
         _FALLBACK_WARNED.add(op)
         _logger.warning(

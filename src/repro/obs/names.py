@@ -1,0 +1,158 @@
+"""Canonical metric-name table + span naming convention.
+
+Every instrumented call site goes through :func:`metric`, which resolves a
+name against this table — so an instrumentation typo fails loudly instead
+of silently minting a new series, and the table IS the registry's emitted
+name set.  docs/ARCHITECTURE.md renders the same table for humans and a
+tier-1 test (``tests/test_docs.py``) cross-checks the two, the same
+pattern as the plan-kind table.
+
+Span names follow ``<subsystem>:<operation>`` (e.g. ``plan:psum``,
+``sync:encode``); :data:`SPANS` is the canonical list.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.obs import config
+from repro.obs import metrics as metrics_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    name: str
+    kind: str  # "counter" | "gauge" | "histogram"
+    labels: tuple  # label NAMES; values supplied per observation
+    module: str  # emitting module (repo-relative)
+    help: str
+    buckets: tuple = ()  # histograms only; () = DEFAULT_TIME_BUCKETS
+
+
+METRICS = (
+    # -- sched/executor.py: one record per plan execution, fed from the
+    #    SAME consolidated WireReport the sink receives (totals agree with
+    #    roofline.summarize_wire_reports by construction)
+    MetricSpec("plan_exec_total", "counter", ("kind",),
+               "sched/executor.py", "plan executions per plan kind"),
+    MetricSpec("plan_wire_raw_bytes_total", "counter", ("kind",),
+               "sched/executor.py",
+               "bytes the plan-driven wires would move raw"),
+    MetricSpec("plan_wire_bytes_total", "counter", ("kind",),
+               "sched/executor.py",
+               "packed bytes actually moved by plan-driven wires"),
+    MetricSpec("plan_wire_ratio", "gauge", ("kind",),
+               "sched/executor.py",
+               "last consolidated wire ratio (wire/raw) per plan kind"),
+    # -- sched/cache.py: gauges mirror PlanCache.cache_info() after every
+    #    lookup ("default" = the process cache, "local" = private instances)
+    MetricSpec("plan_cache_hits", "gauge", ("cache",),
+               "sched/cache.py", "lifetime plan-cache hits"),
+    MetricSpec("plan_cache_misses", "gauge", ("cache",),
+               "sched/cache.py", "lifetime plan-cache misses (= compiles)"),
+    MetricSpec("plan_cache_evictions", "gauge", ("cache",),
+               "sched/cache.py", "lifetime LRU evictions"),
+    MetricSpec("plan_cache_size", "gauge", ("cache",),
+               "sched/cache.py", "plans currently stored"),
+    # -- kernels/__init__.py
+    MetricSpec("kernel_fallback_total", "counter", ("op",),
+               "kernels/__init__.py",
+               "fast-path dispatch degrades (mirror of record_fallback)"),
+    # -- serve/engine.py
+    MetricSpec("serve_admitted_total", "counter", (),
+               "serve/engine.py", "requests admitted into decode slots"),
+    MetricSpec("serve_decode_steps_total", "counter", (),
+               "serve/engine.py", "batched decode steps executed"),
+    MetricSpec("serve_tokens_total", "counter", (),
+               "serve/engine.py", "decode tokens produced (all slots)"),
+    MetricSpec("serve_queue_depth", "gauge", (),
+               "serve/engine.py", "requests waiting for a slot"),
+    MetricSpec("serve_active_slots", "gauge", (),
+               "serve/engine.py", "slots holding a live request"),
+    MetricSpec("serve_tokens_per_step", "gauge", (),
+               "serve/engine.py", "tokens produced by the last decode step"),
+    # -- sync/engine.py
+    MetricSpec("sync_publish_total", "counter", (),
+               "sync/engine.py", "weight versions published"),
+    MetricSpec("sync_updates_total", "counter", ("mode",),
+               "sync/engine.py",
+               "updates encoded, by routing mode (delta/full)"),
+    MetricSpec("sync_update_wire_bytes_total", "counter", ("mode",),
+               "sync/engine.py", "encoded update wire bytes, by mode"),
+    MetricSpec("sync_buckets_total", "counter", ("mode",),
+               "sync/engine.py",
+               "per-bucket wire routing decisions (delta/full/raw)"),
+    MetricSpec("sync_memo_hits_total", "counter", (),
+               "sync/engine.py",
+               "update_for served from the per-(version, base) memo"),
+    MetricSpec("sync_replica_version_lag", "gauge", ("replica",),
+               "sync/engine.py",
+               "latest published version minus the replica's acked version"),
+    # -- p2p/engine.py
+    MetricSpec("p2p_encode_seconds", "histogram", ("codec",),
+               "p2p/engine.py", "host Compressor.encode wall time"),
+    MetricSpec("p2p_decode_seconds", "histogram", ("codec",),
+               "p2p/engine.py", "host Compressor.decode wall time"),
+    # -- runtime/fault_tolerance.py
+    MetricSpec("train_step_seconds", "histogram", (),
+               "runtime/fault_tolerance.py",
+               "fault-tolerant step wall time (incl. retries)"),
+    MetricSpec("train_retries_total", "counter", (),
+               "runtime/fault_tolerance.py",
+               "overflow retries executed by the runner"),
+    MetricSpec("train_stragglers_total", "counter", (),
+               "runtime/fault_tolerance.py", "straggler steps detected"),
+)
+
+SPECS = {s.name: s for s in METRICS}
+
+# Canonical span names (<subsystem>:<operation>); "<kind>" stands for a
+# plan kind from sched/compile.PLAN_KINDS.  ph "i" = instant marker.
+SPANS = (
+    ("plan:<kind>", "sched/executor.py",
+     "one plan execution (trace-time replay of every bucket wire)"),
+    ("plan_cache:compile", "sched/cache.py",
+     "a cache miss running its plan compiler"),
+    ("plan_cache:hit", "sched/cache.py", "instant: plan-cache hit"),
+    ("serve:admit", "serve/engine.py",
+     "one request admission (prefill + splice)"),
+    ("serve:prefill", "serve/engine.py", "the admission's prefill step"),
+    ("serve:kv_ship", "serve/engine.py",
+     "PD-disaggregated prefill->decode cache shipment"),
+    ("serve:decode_step", "serve/engine.py", "one batched decode step"),
+    ("sync:publish", "sync/engine.py", "retaining a new weight version"),
+    ("sync:update", "sync/engine.py", "resolving one replica's update"),
+    ("sync:memo_hit", "sync/engine.py",
+     "instant: update served from the per-base memo"),
+    ("sync:encode", "sync/engine.py",
+     "encoding an update (delta/full/raw per bucket)"),
+    ("p2p:encode", "p2p/engine.py", "host Compressor encode"),
+    ("p2p:split", "p2p/engine.py", "plane-split stage (rANS codec)"),
+    ("p2p:entropy_code", "p2p/engine.py", "rANS exponent-plane encode"),
+    ("p2p:pack", "p2p/engine.py", "fused split+pack pipeline (packed codec)"),
+    ("p2p:decode", "p2p/engine.py", "host Compressor decode"),
+    ("train:step", "runtime/fault_tolerance.py",
+     "one fault-tolerant train step (incl. overflow retries)"),
+    ("train:retry", "runtime/fault_tolerance.py",
+     "instant: overflow retry on the fallback step"),
+    ("train:checkpoint", "runtime/fault_tolerance.py",
+     "async checkpoint submission"),
+)
+
+
+def metric(name: str):
+    """The live metric for a canonical ``name`` (no-op when REPRO_OBS=0).
+
+    Creates it in the default registry on first use with the spec's
+    declared type/labels, so instrumentation cannot drift from the table.
+    Unknown names raise KeyError."""
+    if not config.enabled():
+        _ = SPECS[name]  # typos still fail loudly in disabled mode
+        return metrics_lib.NOOP_METRIC
+    spec = SPECS[name]
+    reg = metrics_lib.registry()
+    if spec.kind == "histogram":
+        return reg.histogram(
+            spec.name, labels=spec.labels, help=spec.help,
+            buckets=spec.buckets or metrics_lib.DEFAULT_TIME_BUCKETS)
+    return getattr(reg, spec.kind)(spec.name, labels=spec.labels,
+                                   help=spec.help)

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import ans, codec, packing
 from repro.core.calibrate import choose_width
 
@@ -151,36 +152,54 @@ class Compressor:
         ``calibrate.choose_width`` probe on the live data.  A plan-driven
         caller therefore pays zero per-call decision work — the paper's
         decided-once schedule applied to the host pipeline."""
+        with obs.span("p2p:encode", codec=self.codec_name,
+                      tensor_class=tensor_class) as sp:
+            msg = self._encode_impl(x, tensor_class=tensor_class,
+                                    reuse_table=reuse_table, plan=plan)
+            sp.args["raw_bytes"] = msg.raw_bytes
+            sp.args["wire_bytes"] = msg.wire_bytes()
+        obs.metric("p2p_encode_seconds").observe(
+            msg.t_split + msg.t_encode, codec=self.codec_name)
+        return msg
+
+    def _encode_impl(self, x, *, tensor_class: str, reuse_table: bool,
+                     plan) -> Message:
         orig_shape = tuple(jnp.asarray(x).shape)
         arr = jnp.asarray(x).reshape(-1)
         lay = codec.layout_of(arr.dtype)
         if self.codec_name == "rans":
-            t0 = time.perf_counter()
-            exp, lo = self._split(arr)
-            lo_packed = packing.bitplane_pack(
-                packing._pad_to(lo.astype(jnp.uint32), 32, "zero"),
-                lay.lo_bits)
-            jax.block_until_ready(lo_packed)
-            t_split = time.perf_counter() - t0
-            t1 = time.perf_counter()
-            key = (tensor_class, lay.name) if reuse_table else None
-            table = self._table_cache.get(key)
-            if table is None:
-                table = ans.build_freq_table(exp)
-                if key is not None:
-                    self._table_cache[key] = table
-            stream = ans.encode(exp, table, lanes=self.lanes)
-            jax.block_until_ready(stream.words)
-            lens = np.asarray(stream.lens)
-            exp_payload = {
-                "words": np.asarray(stream.words),
-                "lens": lens,
-                "freq": np.asarray(table.freq),
-                "n": exp.shape[0],
-                "used_bytes": int(lens.sum()) * 2,
-            }
-            width = 0
-            t_encode = time.perf_counter() - t1
+            # stage times stay perf_counter-based (they feed the wire-time
+            # model even with obs off); the spans mirror the same intervals
+            # onto the trace timeline
+            with obs.span("p2p:split", nbytes=int(arr.size
+                                                  * lay.total_bits // 8)):
+                t0 = time.perf_counter()
+                exp, lo = self._split(arr)
+                lo_packed = packing.bitplane_pack(
+                    packing._pad_to(lo.astype(jnp.uint32), 32, "zero"),
+                    lay.lo_bits)
+                jax.block_until_ready(lo_packed)
+                t_split = time.perf_counter() - t0
+            with obs.span("p2p:entropy_code", lanes=self.lanes):
+                t1 = time.perf_counter()
+                key = (tensor_class, lay.name) if reuse_table else None
+                table = self._table_cache.get(key)
+                if table is None:
+                    table = ans.build_freq_table(exp)
+                    if key is not None:
+                        self._table_cache[key] = table
+                stream = ans.encode(exp, table, lanes=self.lanes)
+                jax.block_until_ready(stream.words)
+                lens = np.asarray(stream.lens)
+                exp_payload = {
+                    "words": np.asarray(stream.words),
+                    "lens": lens,
+                    "freq": np.asarray(table.freq),
+                    "n": exp.shape[0],
+                    "used_bytes": int(lens.sum()) * 2,
+                }
+                width = 0
+                t_encode = time.perf_counter() - t1
         else:
             wkey = (tensor_class, lay.name)
             width = None
@@ -193,10 +212,11 @@ class Compressor:
                 self._width_cache[wkey] = width
             fn = self._packed_pipeline(arr.shape[0], lay.name, width)
             lo_packed, pk = fn(arr)  # warm the jit cache
-            t0 = time.perf_counter()
-            lo_packed, pk = fn(arr)
-            jax.block_until_ready(pk.payload)
-            t_total = time.perf_counter() - t0
+            with obs.span("p2p:pack", width=width):
+                t0 = time.perf_counter()
+                lo_packed, pk = fn(arr)
+                jax.block_until_ready(pk.payload)
+                t_total = time.perf_counter() - t0
             # one fused pipeline: attribute stage times by plane bytes
             lo_frac = lay.lo_bits / (lay.lo_bits + max(width, 1))
             t_split = t_total * lo_frac
@@ -220,6 +240,15 @@ class Compressor:
     # -- decode ----------------------------------------------------------------
 
     def decode(self, msg: Message):
+        t0 = time.perf_counter()
+        with obs.span("p2p:decode", codec=msg.codec,
+                      raw_bytes=msg.raw_bytes):
+            out = self._decode_impl(msg)
+        obs.metric("p2p_decode_seconds").observe(
+            time.perf_counter() - t0, codec=msg.codec)
+        return out
+
+    def _decode_impl(self, msg: Message):
         lay = codec.LAYOUTS[msg.dtype_name]
         n = int(np.prod(msg.shape)) if msg.shape else 1
         lo = packing.bitplane_unpack(jnp.asarray(msg.lo_payload),

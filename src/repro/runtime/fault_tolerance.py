@@ -32,6 +32,7 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint.manager import CheckpointManager
 
 
@@ -95,23 +96,34 @@ class StepRunner:
 
     def run_step(self, state, batch):
         """One fault-tolerant step.  Returns (state, metrics dict)."""
-        t0 = time.perf_counter()
-        state, metrics = self.step_fn(state, batch)
-        overflow = int(np.asarray(metrics["overflow"]))
-        tries = 0
-        while overflow != 0 and tries < self.rcfg.max_retries_per_step:
-            # the guarded step masked out its own update; redo uncompressed
-            self.retries += 1
-            tries += 1
-            if self.fallback_fn is None:
-                break
-            state, metrics = self.fallback_fn(state, batch)
+        # the step time stays perf_counter-based (it feeds the straggler
+        # EMA even with obs off); the train:step span mirrors the same
+        # interval onto the trace, retries included
+        with obs.span("train:step") as sp:
+            t0 = time.perf_counter()
+            state, metrics = self.step_fn(state, batch)
             overflow = int(np.asarray(metrics["overflow"]))
-        dt = time.perf_counter() - t0
+            tries = 0
+            while overflow != 0 and tries < self.rcfg.max_retries_per_step:
+                # the guarded step masked out its own update; redo
+                # uncompressed
+                self.retries += 1
+                tries += 1
+                obs.instant("train:retry", attempt=tries)
+                obs.metric("train_retries_total").inc()
+                if self.fallback_fn is None:
+                    break
+                state, metrics = self.fallback_fn(state, batch)
+                overflow = int(np.asarray(metrics["overflow"]))
+            dt = time.perf_counter() - t0
+            sp.args["retries"] = tries
         metrics = dict(metrics)
         metrics["step_time_s"] = dt
         metrics["straggler"] = self._check_straggler(dt)
         metrics["retries"] = tries
+        obs.metric("train_step_seconds").observe(dt)
+        if metrics["straggler"]:
+            obs.metric("train_stragglers_total").inc()
         return state, metrics
 
     def train(self, state, *, start_step: int = 0, num_steps: int = 100,
@@ -127,7 +139,8 @@ class StepRunner:
             self._heartbeat(step)
             history.append(float(np.asarray(metrics["loss"])))
             if step % self.rcfg.ckpt_every == 0 and step > start_step:
-                self.ckpt.save_async(step, state)
+                with obs.span("train:checkpoint", step=step):
+                    self.ckpt.save_async(step, state)
             if log_every and step % log_every == 0:
                 log_fn(f"step {step:6d} loss {history[-1]:.4f} "
                        f"t {metrics['step_time_s']*1e3:.0f}ms "

@@ -29,6 +29,7 @@ import pickle
 import threading
 from typing import Callable, Optional
 
+from repro import obs
 from repro.sched.plan import CommPlan
 
 
@@ -68,6 +69,24 @@ class PlanCache:
             self._plans.popitem(last=False)
             self.stats.evictions += 1
 
+    def _obs_label(self) -> str:
+        """Gauge label: the process cache is "default", private instances
+        (tests, benchmarks) are "local" so they cannot stomp its series."""
+        return "default" if self is globals().get("_DEFAULT") else "local"
+
+    def _export_obs(self) -> None:
+        """Mirror cache_info() into the metrics registry (no-op when off)."""
+        if not obs.enabled():
+            return
+        label = self._obs_label()
+        with self._lock:
+            hits, misses = self.stats.hits, self.stats.misses
+            evictions, size = self.stats.evictions, len(self._plans)
+        obs.metric("plan_cache_hits").set(hits, cache=label)
+        obs.metric("plan_cache_misses").set(misses, cache=label)
+        obs.metric("plan_cache_evictions").set(evictions, cache=label)
+        obs.metric("plan_cache_size").set(size, cache=label)
+
     def get_or_compile(self, key: tuple, builder: Callable[[], CommPlan]) -> CommPlan:
         """Return the plan for ``key``, compiling (and storing) on miss."""
         with self._lock:
@@ -75,15 +94,22 @@ class PlanCache:
             if plan is not None:
                 self._plans.move_to_end(key)
                 self.stats.hits += 1
-                return plan
+        if plan is not None:
+            obs.instant("plan_cache:hit", kind=getattr(plan, "kind", "?"),
+                        cache=self._obs_label())
+            self._export_obs()
+            return plan
         # compile outside the lock: builders are pure and idempotent, so a
         # racing double-compile is wasted work, not a correctness issue
-        plan = builder()
+        with obs.span("plan_cache:compile", cache=self._obs_label()) as sp:
+            plan = builder()
+            sp.args["kind"] = getattr(plan, "kind", "?")
         with self._lock:
             self._plans.setdefault(key, plan)
             self._plans.move_to_end(key)
             self.stats.misses += 1
             self._evict_over_capacity_locked()
+        self._export_obs()
         return plan
 
     def cache_info(self) -> dict:
@@ -105,9 +131,19 @@ class PlanCache:
         return key in self._plans
 
     def clear(self) -> None:
+        """Drop every stored plan.  Lifetime hit/miss/eviction counters are
+        NOT reset (clearing storage is not forgetting history — a monitor
+        reading ``cache_info()`` across a clear must not see totals jump
+        backwards); call :meth:`reset_stats` separately for a fresh ledger."""
         with self._lock:
             self._plans.clear()
+        self._export_obs()
+
+    def reset_stats(self) -> None:
+        """Zero the hit/miss/eviction counters without touching the plans."""
+        with self._lock:
             self.stats = CacheStats()
+        self._export_obs()
 
 
 # ---------------------------------------------------------------------------

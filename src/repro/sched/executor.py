@@ -43,6 +43,7 @@ from repro.core.compressed_collectives import (
     psum_safe,
     reduce_scatter_compressed,
 )
+from repro import obs
 from repro.core.policy import (WireReport, capture_wire_reports,
                                record_wire_report)
 from repro.sched import compile as sched_compile
@@ -75,10 +76,30 @@ def consolidate_reports(plan: CommPlan, caught) -> WireReport | None:
     )
 
 
+def _plan_span(plan: CommPlan):
+    """Trace span for one plan execution (``plan:<kind>``, fires at trace
+    time — plan replay is pure Python, so the wall clock is the schedule-
+    replay cost, not device time)."""
+    return obs.span(f"plan:{plan.kind}",
+                    plan_key=f"{hash(plan.key) & 0xFFFFFFFF:08x}",
+                    buckets=len(plan.buckets))
+
+
 def _emit(plan: CommPlan, caught) -> None:
+    """Record the consolidated WireReport AND mirror it into the metrics
+    registry — both views are fed from the SAME record, so the snapshot's
+    per-kind wire totals agree exactly with ``summarize_wire_reports``
+    over the ``plan:*`` reports of the same run."""
     rep = consolidate_reports(plan, caught)
     if rep is not None:
         record_wire_report(rep)
+    obs.metric("plan_exec_total").inc(kind=plan.kind)
+    if rep is not None:
+        obs.metric("plan_wire_raw_bytes_total").inc(rep.raw_bytes,
+                                                    kind=plan.kind)
+        obs.metric("plan_wire_bytes_total").inc(rep.wire_bytes,
+                                                kind=plan.kind)
+        obs.metric("plan_wire_ratio").set(rep.ratio, kind=plan.kind)
 
 
 # ---------------------------------------------------------------------------
@@ -149,7 +170,7 @@ def execute_psum(plan: CommPlan, tree, axis_name):
     assert len(leaves) == plan.n_leaves, (len(leaves), plan.n_leaves)
     out = list(leaves)
     flag = jnp.int32(0)
-    with capture_wire_reports() as caught:
+    with _plan_span(plan), capture_wire_reports() as caught:
         for b in plan.buckets:
             parts = [leaves[i].reshape(-1) for i, _, _ in b.members]
             bucket = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
@@ -209,7 +230,7 @@ def reduce_scatter_with_plan(x, axis_name, *, policy=None,
             key, lambda: sched_compile.compile_reduce_scatter_plan(
                 int(np.prod(x.shape)), name, axis_name, policy=policy,
                 n_dev=n_dev, tensor_class=tensor_class, key=key))
-    with capture_wire_reports() as caught:
+    with _plan_span(plan), capture_wire_reports() as caught:
         out, flag = _exec_reduce_scatter(plan.buckets[0], x, axis_name,
                                          plan.use_pallas)
     _emit(plan, caught)
@@ -232,7 +253,7 @@ def all_gather_with_plan(y, axis_name, *, policy=None,
             key, lambda: sched_compile.compile_all_gather_plan(
                 int(np.prod(y.shape)), name, axis_name, policy=policy,
                 n_dev=n_dev, tensor_class=tensor_class, key=key))
-    with capture_wire_reports() as caught:
+    with _plan_span(plan), capture_wire_reports() as caught:
         out, flag = _exec_all_gather(plan.buckets[0], y, axis_name,
                                      plan.use_pallas)
     _emit(plan, caught)
@@ -253,13 +274,17 @@ class Zero1Execution:
         self.axis_name = axis_name
         self._cap = capture_wire_reports()
         self._caught = None
+        self._span = None
 
     def __enter__(self):
+        self._span = _plan_span(self.plan)
+        self._span.__enter__()
         self._caught = self._cap.__enter__()
         return self
 
     def __exit__(self, *exc):
         self._cap.__exit__(*exc)
+        self._span.__exit__(*exc)
         if exc[0] is None:
             _emit(self.plan, self._caught)
         return False
@@ -308,7 +333,7 @@ def execute_p2p(plan: CommPlan, x, axis_name, perm, *, reduce_into=None):
         jnp.dtype(x.dtype).name == plan.buckets[0].dtype_name, (
             f"tensor {x.shape}/{jnp.dtype(x.dtype).name} does not match the "
             f"plan's signature {shape}/{plan.buckets[0].dtype_name}")
-    with capture_wire_reports() as caught:
+    with _plan_span(plan), capture_wire_reports() as caught:
         out, flag = _exec_p2p_bucket(plan.buckets[0], x, axis_name, perm,
                                      strategy=plan.strategy,
                                      use_pallas=plan.use_pallas,
@@ -364,7 +389,7 @@ def execute_kv_transfer(plan: CommPlan, cache, axis_name, perm):
                     f"recorded {shape}/{b.dtype_name}")
     out = list(leaves)
     flag = jnp.int32(0)
-    with capture_wire_reports() as caught:
+    with _plan_span(plan), capture_wire_reports() as caught:
         for b in plan.buckets:
             parts = [leaves[i].reshape(-1) for i, _, _ in b.members]
             bucket = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
@@ -448,7 +473,7 @@ def execute_wsync(plan: CommPlan, tree, axis_name, perm, *, base=None):
                     f"recorded {shape}/{b.dtype_name}")
     out = list(leaves)
     flag = jnp.int32(0)
-    with capture_wire_reports() as caught:
+    with _plan_span(plan), capture_wire_reports() as caught:
         for b in plan.buckets:
             bucket = codec.concat_members(leaves, b.members)
             bucket_base = (codec.concat_members(base_leaves, b.members)

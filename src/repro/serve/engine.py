@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import transformer
 from repro.models.config import ArchConfig
 
@@ -159,6 +160,7 @@ class ServeEngine:
     def submit(self, req: Request):
         req.out = []
         self.queue.append(req)
+        obs.metric("serve_queue_depth").set(len(self.queue))
 
     @staticmethod
     def _splice_impl(batched_cache, one_cache, slot):
@@ -182,31 +184,42 @@ class ServeEngine:
         return out
 
     def _admit(self):
+        admitted = 0
         for s in range(self.scfg.batch_slots):
             if self.slots[s] is not None or not self.queue:
                 continue
             req = self.queue.pop(0)
-            L = len(req.prompt)
-            pad = -len(req.prompt) % self.scfg.prefill_chunk or 0
-            toks = np.concatenate([np.zeros(pad, np.int32), req.prompt])
-            one_cache = transformer.init_cache(self.cfg, 1, self.scfg.max_len)
-            logits, one_cache = self.prefill_step(
-                self.params, {"tokens": jnp.asarray(toks[None])}, one_cache)
-            if self.scfg.pd_disaggregated:
-                one_cache = self._ship_kv(one_cache)
-            # NOTE: left-padding shifts positions; acceptable for the demo
-            # engine (pad=0 when prompts align with prefill_chunk)
-            nxt = sample(logits[:, -1], self._next_key(), self.scfg.temperature)
-            self.cache = self._splice(self.cache, one_cache, s)
-            self.tokens = self.tokens.at[s, 0].set(nxt[0])
-            req.out.append(int(nxt[0]))
-            if req.max_new <= 1:  # prefill-sampled token was the budget
-                req.done = True
-                self.finished.append(req)
-                continue
-            self.slots[s] = req
-            self.pos[s] = len(toks)
-            self.budget[s] = req.max_new - 1  # first token came from prefill
+            admitted += 1
+            with obs.span("serve:admit", rid=req.rid, slot=s):
+                pad = -len(req.prompt) % self.scfg.prefill_chunk or 0
+                toks = np.concatenate([np.zeros(pad, np.int32), req.prompt])
+                one_cache = transformer.init_cache(self.cfg, 1,
+                                                   self.scfg.max_len)
+                with obs.span("serve:prefill", tokens=len(toks)):
+                    logits, one_cache = self.prefill_step(
+                        self.params, {"tokens": jnp.asarray(toks[None])},
+                        one_cache)
+                if self.scfg.pd_disaggregated:
+                    one_cache = self._ship_kv(one_cache)
+                # NOTE: left-padding shifts positions; acceptable for the demo
+                # engine (pad=0 when prompts align with prefill_chunk)
+                nxt = sample(logits[:, -1], self._next_key(),
+                             self.scfg.temperature)
+                self.cache = self._splice(self.cache, one_cache, s)
+                self.tokens = self.tokens.at[s, 0].set(nxt[0])
+                req.out.append(int(nxt[0]))
+                if req.max_new <= 1:  # prefill-sampled token was the budget
+                    req.done = True
+                    self.finished.append(req)
+                    continue
+                self.slots[s] = req
+                self.pos[s] = len(toks)
+                self.budget[s] = req.max_new - 1  # 1st token from prefill
+        if admitted:
+            obs.metric("serve_admitted_total").inc(admitted)
+        obs.metric("serve_queue_depth").set(len(self.queue))
+        obs.metric("serve_active_slots").set(
+            sum(r is not None for r in self.slots))
 
     def _ship_kv(self, one_cache):
         """Cross the prefill->decode boundary: pack the freshly prefilled
@@ -220,10 +233,11 @@ class ServeEngine:
         colocated serving would."""
         from repro.serve.kv_transfer import ship_cache, unpack_cache
 
-        wire, _ = ship_cache(one_cache, self.kv_compressor,
-                             policy=self.kv_policy,
-                             plan_cache=self.kv_plan_cache)
-        return unpack_cache(wire, self.kv_compressor)
+        with obs.span("serve:kv_ship"):
+            wire, _ = ship_cache(one_cache, self.kv_compressor,
+                                 policy=self.kv_policy,
+                                 plan_cache=self.kv_plan_cache)
+            return unpack_cache(wire, self.kv_compressor)
 
     def _next_key(self):
         self._key, k = jax.random.split(self._key)
@@ -238,22 +252,31 @@ class ServeEngine:
             if all(s is None for s in self.slots):
                 return False
         # engine-wide cache pos = max slot pos (slot caches padded before it)
-        self.cache["pos"] = jnp.asarray(int(self.pos.max()), jnp.int32)
-        logits, self.cache = self.decode_step(self.params, self.tokens, self.cache)
-        nxt = sample(logits[:, -1], self._next_key(), self.scfg.temperature)
-        self.tokens = nxt[:, None]
-        for s, req in enumerate(self.slots):
-            if req is None:
-                continue
-            t = int(nxt[s])
-            req.out.append(t)
-            self.pos[s] += 1
-            self.budget[s] -= 1
-            if self.budget[s] <= 0 or t == self.scfg.eos_token or \
-               self.pos[s] >= self.scfg.max_len - 1:
-                req.done = True
-                self.finished.append(req)
-                self.slots[s] = None
+        active = sum(r is not None for r in self.slots)
+        with obs.span("serve:decode_step", active=active):
+            self.cache["pos"] = jnp.asarray(int(self.pos.max()), jnp.int32)
+            logits, self.cache = self.decode_step(self.params, self.tokens,
+                                                  self.cache)
+            nxt = sample(logits[:, -1], self._next_key(),
+                         self.scfg.temperature)
+            self.tokens = nxt[:, None]
+            produced = 0
+            for s, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                t = int(nxt[s])
+                req.out.append(t)
+                produced += 1
+                self.pos[s] += 1
+                self.budget[s] -= 1
+                if self.budget[s] <= 0 or t == self.scfg.eos_token or \
+                   self.pos[s] >= self.scfg.max_len - 1:
+                    req.done = True
+                    self.finished.append(req)
+                    self.slots[s] = None
+        obs.metric("serve_decode_steps_total").inc()
+        obs.metric("serve_tokens_total").inc(produced)
+        obs.metric("serve_tokens_per_step").set(produced)
         self._admit()
         return True
 

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import codec, packing
 from repro.core.policy import CompressionPolicy
 from repro.sched.plan import PATH_COMPRESSED
@@ -145,7 +146,21 @@ class WeightSyncEngine:
         """Retain ``params`` as the next weight version (the train-step
         publish hook's target — ``train/step.make_publish_hook``)."""
         self._updates.clear()  # encoded updates are per-version
-        return self.store.publish(params)
+        with obs.span("sync:publish"):
+            version = self.store.publish(params)
+        obs.metric("sync_publish_total").inc()
+        self._export_lag()  # every replica just fell one version behind
+        return version
+
+    def _export_lag(self) -> None:
+        """Per-replica version-lag gauges (latest - acked, epoch-current)."""
+        if not obs.enabled():
+            return
+        gauge = obs.metric("sync_replica_version_lag")
+        latest = self.store.version
+        for r in self.store.acked_replicas():
+            acked = self.store.acked_version(r)
+            gauge.set(latest - acked, replica=str(r))
 
     def plan_for(self, params):
         """The cached kind-"wsync" CommPlan of ``params``' signature."""
@@ -163,13 +178,21 @@ class WeightSyncEngine:
         per-bucket delta overflow).  Updates are memoized per (latest
         version, base version): broadcasting to N replicas with the same
         ack encodes once."""
-        params, version = self.store.latest()
-        base_version = self.store.base_for(replica)
-        cached = self._updates.get(base_version)
-        if cached is not None:
-            return cached
-        update = self._encode_update(params, version, base_version)
-        self._updates[base_version] = update
+        with obs.span("sync:update", replica=str(replica)) as sp:
+            params, version = self.store.latest()
+            base_version = self.store.base_for(replica)
+            sp.args["version"] = version
+            cached = self._updates.get(base_version)
+            if cached is not None:
+                obs.instant("sync:memo_hit", version=version,
+                            base=base_version)
+                obs.metric("sync_memo_hits_total").inc()
+                return cached
+            update = self._encode_update(params, version, base_version)
+            self._updates[base_version] = update
+        obs.metric("sync_updates_total").inc(mode=update.mode)
+        obs.metric("sync_update_wire_bytes_total").inc(update.wire_bytes,
+                                                       mode=update.mode)
         return update
 
     def _encode_update(self, params, version: int,
@@ -183,45 +206,51 @@ class WeightSyncEngine:
         buckets = []
         wire = 0
         used_delta = False
-        for b in plan.buckets:
-            bucket = codec.concat_members(leaves, b.members)
-            mode, msg = MODE_RAW, None
-            if b.path == PATH_COMPRESSED:
-                # pad to the block grid like the in-mesh wire, so the plan's
-                # eval_shape accounting IS this wire's size (and overflow
-                # thresholds match delta_send exactly)
-                bucket = codec.pad_flat_bits(bucket, b.block)
-                if base_leaves is not None and b.delta_width:
-                    base_bucket = codec.pad_flat_bits(
-                        codec.concat_members(base_leaves, b.members), b.block)
-                    m = packing.encode_delta(
-                        bucket, base_bucket, width=b.delta_width,
-                        lo_width=b.delta_lo_width, block=b.block,
-                        exc_frac=b.exc_frac)
-                    if not int(m.overflow):  # else: fall through to full
-                        mode, msg = MODE_DELTA, jax.device_get(m)
-                        wire += m.wire_bytes()
-                        used_delta = True
-                if msg is None:
-                    m = packing.encode_message(
-                        bucket, width=b.width, block=b.block,
-                        exc_frac=b.exc_frac, fused=b.encode_fused)
-                    if int(m.exp.overflow):
-                        # even the full wire's exceptions overflowed
-                        # (pathological exponent spread): ship the bucket
-                        # raw — the host twin of the runtime's
-                        # retry-uncompressed guard.  Never corrupt.
-                        mode, msg = MODE_RAW, _raw_wire(bucket, b.dtype_name)
-                        wire += msg.nbytes
-                    else:
-                        mode, msg = MODE_FULL, jax.device_get(m)
-                        wire += m.wire_bytes()
-            else:
-                msg = _raw_wire(bucket, b.dtype_name)
-                wire += msg.nbytes
-            buckets.append((b.dtype_name, b.members, mode, msg))
-        raw_leaves = tuple((i, np.asarray(leaves[i]))
-                           for i in plan.raw_leaf_ix)
+        bucket_counter = obs.metric("sync_buckets_total")
+        with obs.span("sync:encode", version=version,
+                      base=base_version if base_version is not None else -1):
+            for b in plan.buckets:
+                bucket = codec.concat_members(leaves, b.members)
+                mode, msg = MODE_RAW, None
+                if b.path == PATH_COMPRESSED:
+                    # pad to the block grid like the in-mesh wire, so the
+                    # plan's eval_shape accounting IS this wire's size (and
+                    # overflow thresholds match delta_send exactly)
+                    bucket = codec.pad_flat_bits(bucket, b.block)
+                    if base_leaves is not None and b.delta_width:
+                        base_bucket = codec.pad_flat_bits(
+                            codec.concat_members(base_leaves, b.members),
+                            b.block)
+                        m = packing.encode_delta(
+                            bucket, base_bucket, width=b.delta_width,
+                            lo_width=b.delta_lo_width, block=b.block,
+                            exc_frac=b.exc_frac)
+                        if not int(m.overflow):  # else: fall through to full
+                            mode, msg = MODE_DELTA, jax.device_get(m)
+                            wire += m.wire_bytes()
+                            used_delta = True
+                    if msg is None:
+                        m = packing.encode_message(
+                            bucket, width=b.width, block=b.block,
+                            exc_frac=b.exc_frac, fused=b.encode_fused)
+                        if int(m.exp.overflow):
+                            # even the full wire's exceptions overflowed
+                            # (pathological exponent spread): ship the bucket
+                            # raw — the host twin of the runtime's
+                            # retry-uncompressed guard.  Never corrupt.
+                            mode, msg = (MODE_RAW,
+                                         _raw_wire(bucket, b.dtype_name))
+                            wire += msg.nbytes
+                        else:
+                            mode, msg = MODE_FULL, jax.device_get(m)
+                            wire += m.wire_bytes()
+                else:
+                    msg = _raw_wire(bucket, b.dtype_name)
+                    wire += msg.nbytes
+                bucket_counter.inc(mode=mode)
+                buckets.append((b.dtype_name, b.members, mode, msg))
+            raw_leaves = tuple((i, np.asarray(leaves[i]))
+                               for i in plan.raw_leaf_ix)
         wire += sum(arr.nbytes for _, arr in raw_leaves)
         raw_total = sum(l.size * jnp.dtype(l.dtype).itemsize
                         for l in leaves if hasattr(l, "dtype"))
@@ -235,7 +264,11 @@ class WeightSyncEngine:
 
     def ack(self, replica, version: int, epoch: Optional[int] = None) -> bool:
         """Record a replica's applied version (epoch-fenced)."""
-        return self.store.ack(replica, version, epoch)
+        ok = self.store.ack(replica, version, epoch)
+        if ok:
+            obs.metric("sync_replica_version_lag").set(
+                self.store.version - version, replica=str(replica))
+        return ok
 
     def advance_epoch(self) -> int:
         """Fence all acks (trainer restart/restore): next sends go full."""

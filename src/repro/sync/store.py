@@ -96,6 +96,12 @@ class VersionedStore:
         a = self._acks.get(replica)
         return a[1] if a is not None and a[0] == self.epoch else None
 
+    def acked_replicas(self) -> tuple:
+        """Replicas with an EPOCH-CURRENT ack (fenced acks excluded) —
+        the population whose version lag is meaningful to report."""
+        return tuple(r for r, (e, _) in self._acks.items()
+                     if e == self.epoch)
+
     def base_for(self, replica) -> Optional[int]:
         """The version a delta send to ``replica`` may assume as base:
         its epoch-current ack, IF that version is still retained.  None

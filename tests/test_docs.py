@@ -103,3 +103,56 @@ def test_doc_covers_all_subsystems():
                   and not d.startswith("_"))
     missing = [p for p in pkgs if f"`{p}" not in text and f"{p}/" not in text]
     assert not missing, f"ARCHITECTURE.md does not mention: {missing}"
+
+
+# ---------------------------------------------------------------------------
+# Observability section: the metric table IS obs.names.METRICS
+# ---------------------------------------------------------------------------
+
+def _obs_section():
+    text = _doc_text()
+    m = re.search(r"^## Observability\n(.*?)(?=^## )", text,
+                  re.MULTILINE | re.DOTALL)
+    assert m, "ARCHITECTURE.md has no '## Observability' section"
+    return m.group(1)
+
+
+def _metric_rows():
+    rows = []
+    for line in _obs_section().splitlines():
+        if not line.startswith("|") or re.match(r"^\|[\s\-|]+\|$", line):
+            continue
+        cells = [c.strip() for c in line.strip("|").split("|")]
+        if cells and cells[0] != "name":  # skip header
+            rows.append(cells)
+    assert rows, "Observability metric table has no data rows"
+    return rows
+
+
+def test_obs_metric_table_matches_registry():
+    """Every canonical metric appears in the doc with its exact type,
+    label set and emitting module — and the doc lists nothing the code
+    does not emit (the plan-kind-table pattern applied to telemetry)."""
+    from repro.obs.names import METRICS
+
+    doc = {re.sub(r"`", "", r[0]): r for r in _metric_rows()}
+    specs = {s.name: s for s in METRICS}
+    assert set(doc) == set(specs), (
+        f"doc-only: {sorted(set(doc) - set(specs))}, "
+        f"code-only: {sorted(set(specs) - set(doc))}")
+    for name, spec in specs.items():
+        row = doc[name]
+        assert row[1] == spec.kind, (name, row[1], spec.kind)
+        doc_labels = tuple(re.findall(r"`([\w]+)`", row[2]))
+        assert doc_labels == spec.labels, (name, doc_labels, spec.labels)
+        assert re.sub(r"`", "", row[3]) == spec.module, (name, row[3])
+
+
+def test_obs_span_convention_documented():
+    """Every canonical span name appears in the Observability section."""
+    from repro.obs.names import SPANS
+
+    section = _obs_section()
+    missing = [n for n, _, _ in SPANS if f"`{n}`" not in section]
+    assert not missing, (
+        f"Observability section does not mention spans: {missing}")

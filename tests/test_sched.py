@@ -87,7 +87,29 @@ def test_cache_lru_eviction_and_info():
     assert info == {"hits": 1, "misses": 4, "evictions": 2, "size": 2,
                     "capacity": 2, "hit_rate": 0.2}
     cache.clear()
-    assert cache.cache_info()["evictions"] == 0 and len(cache) == 0
+    # clear() drops storage but keeps the lifetime ledger: a monitor
+    # reading cache_info() across a clear() must not see totals rewind
+    assert len(cache) == 0 and cache.cache_info()["size"] == 0
+    assert cache.cache_info() == {"hits": 1, "misses": 4, "evictions": 2,
+                                  "size": 0, "capacity": 2, "hit_rate": 0.2}
+    cache.reset_stats()
+    assert cache.cache_info() == {"hits": 0, "misses": 0, "evictions": 0,
+                                  "size": 0, "capacity": 2, "hit_rate": 0.0}
+
+
+def test_cache_reset_stats_keeps_plans():
+    """reset_stats() is the inverse decoupling: counters zero, plans stay."""
+    cache = sched.PlanCache(capacity=4)
+    cache.get_or_compile(("k", 1), lambda: "plan-1")
+    cache.get_or_compile(("k", 1), lambda: "plan-1")
+    assert cache.cache_info()["hits"] == 1
+    cache.reset_stats()
+    assert len(cache) == 1 and ("k", 1) in cache
+    assert cache.cache_info()["hits"] == 0
+    # the retained plan still hits (and counts from the fresh ledger)
+    cache.get_or_compile(("k", 1), lambda: "never-called")
+    assert cache.cache_info() == {"hits": 1, "misses": 0, "evictions": 0,
+                                  "size": 1, "capacity": 4, "hit_rate": 1.0}
 
 
 def test_cache_unbounded_and_capacity_validation():
