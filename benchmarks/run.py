@@ -31,6 +31,7 @@ MODULES = [
     ("sched", "benchmarks.fig_sched"),
     ("encode", "benchmarks.fig_encode"),
     ("sync", "benchmarks.fig_sync"),
+    ("faults", "benchmarks.fig_faults"),
     ("obs", "repro.obs.dump"),
 ]
 

@@ -34,6 +34,23 @@ import jax
 import numpy as np
 
 
+def _restore_dtype(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    """Re-view an array under its manifest dtype.  numpy round-trips
+    extension dtypes (bfloat16, float8_*) through ``.npy`` as raw void
+    bytes — a restore that handed those to the runtime would crash (or
+    worse, silently reinterpret); the manifest's dtype string is the
+    truth, and a byte-preserving ``view`` recovers the original bits."""
+    if str(arr.dtype) == dtype_name:
+        return arr
+    try:
+        dt = np.dtype(dtype_name)
+    except TypeError:
+        import ml_dtypes
+
+        dt = np.dtype(getattr(ml_dtypes, dtype_name))
+    return arr.view(dt)
+
+
 def _tree_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
@@ -148,6 +165,16 @@ class CheckpointManager:
         with open(p) as f:
             return int(f.read().strip().split("_")[1])
 
+    def available_steps(self) -> tuple:
+        """Every restorable step on disk, newest first — the fallback
+        order for a resume that finds its latest checkpoint corrupt
+        (``runtime/fault_tolerance.StepRunner.try_resume``)."""
+        steps = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                steps.append(int(d.split("_")[1]))
+        return tuple(sorted(steps, reverse=True))
+
     def restore(self, state_like, *, step: Optional[int] = None,
                 shardings=None, verify: bool = True):
         """Load a checkpoint into the structure of ``state_like``.
@@ -173,7 +200,7 @@ class CheckpointManager:
                     digest = hashlib.sha256(f.read()).hexdigest()
                 if digest != ent["sha256"]:
                     raise IOError(f"checksum mismatch for {name} in {d}")
-            arr = np.load(path)
+            arr = _restore_dtype(np.load(path), ent["dtype"])
             if sh is not None:
                 out.append(jax.device_put(arr, sh))
             else:

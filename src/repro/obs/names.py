@@ -101,6 +101,40 @@ METRICS = (
                "overflow retries executed by the runner"),
     MetricSpec("train_stragglers_total", "counter", (),
                "runtime/fault_tolerance.py", "straggler steps detected"),
+    MetricSpec("ckpt_resume_fallbacks_total", "counter", (),
+               "runtime/fault_tolerance.py",
+               "resumes that skipped a corrupt checkpoint for an older one"),
+    # -- runtime/faults.py (chaos harness; zero when no FaultPlan active)
+    MetricSpec("fault_injected_total", "counter", ("kind",),
+               "runtime/faults.py",
+               "faults injected by the active FaultPlan, per kind"),
+    # -- sync/fleet.py
+    MetricSpec("sync_integrity_failures_total", "counter", ("reason",),
+               "sync/fleet.py",
+               "updates rejected before apply (checksum/base_fence)"),
+    MetricSpec("fleet_retries_total", "counter", (),
+               "sync/fleet.py",
+               "per-replica send failures scheduled for retry"),
+    MetricSpec("fleet_escalations_total", "counter", ("to",),
+               "sync/fleet.py",
+               "recovery escalations down the delta->full->raw ladder"),
+    MetricSpec("fleet_quarantines_total", "counter", (),
+               "sync/fleet.py",
+               "replicas quarantined after exhausting max_retries"),
+    MetricSpec("fleet_rounds_total", "counter", (),
+               "sync/fleet.py", "distribute/ack rounds driven"),
+    MetricSpec("fleet_live_replicas", "gauge", (),
+               "sync/fleet.py", "replicas currently alive in the fleet"),
+    MetricSpec("fleet_convergence_rounds", "gauge", (),
+               "sync/fleet.py",
+               "rounds the last settle() took to converge the fleet"),
+    # -- serve/engine.py (integrity/recovery)
+    MetricSpec("serve_ingest_rejects_total", "counter", ("reason",),
+               "serve/engine.py",
+               "hot-swap updates rejected before apply (checksum/fence)"),
+    MetricSpec("serve_kv_retries_total", "counter", (),
+               "serve/engine.py",
+               "KV shipments re-packed after an integrity failure"),
 )
 
 SPECS = {s.name: s for s in METRICS}
@@ -136,6 +170,14 @@ SPANS = (
      "instant: overflow retry on the fallback step"),
     ("train:checkpoint", "runtime/fault_tolerance.py",
      "async checkpoint submission"),
+    ("train:resume_fallback", "runtime/fault_tolerance.py",
+     "instant: resume skipped a corrupt checkpoint for an older one"),
+    ("fault:inject", "runtime/faults.py",
+     "instant: the FaultPlan injected one message fault"),
+    ("fleet:round", "sync/fleet.py",
+     "one fleet distribute/ack round (events, sends, acks, timeouts)"),
+    ("fleet:restart", "sync/fleet.py",
+     "trainer failover: checkpoint restore + epoch fence"),
 )
 
 

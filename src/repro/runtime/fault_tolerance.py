@@ -36,6 +36,29 @@ from repro import obs
 from repro.checkpoint.manager import CheckpointManager
 
 
+def write_heartbeat(path: str, step: int) -> None:
+    """Atomically publish a liveness file: tmp + ``os.replace``, the same
+    pattern as the trace exporter — a watchdog that reads mid-write must
+    see the previous heartbeat, never a truncated JSON."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"step": step, "t": time.time()}, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def heartbeat_age(path: str) -> Optional[float]:
+    """Seconds since the heartbeat at ``path`` was written, or None when
+    it is missing or unreadable — the watchdog-side liveness probe
+    (age > threshold means the runner is wedged or gone)."""
+    try:
+        with open(path) as f:
+            return max(time.time() - float(json.load(f)["t"]), 0.0)
+    except (OSError, ValueError, KeyError, TypeError):
+        return None
+
+
 @dataclasses.dataclass
 class RunnerConfig:
     ckpt_dir: str = "/tmp/repro_ckpt"
@@ -80,8 +103,7 @@ class StepRunner:
 
     def _heartbeat(self, step: int):
         if self.rcfg.heartbeat_path:
-            with open(self.rcfg.heartbeat_path, "w") as f:
-                json.dump({"step": step, "t": time.time()}, f)
+            write_heartbeat(self.rcfg.heartbeat_path, step)
 
     def _check_straggler(self, dt: float) -> bool:
         self.times.append(dt)
@@ -152,14 +174,26 @@ class StepRunner:
     # -- restart ---------------------------------------------------------------
 
     def try_resume(self, state_like, shardings=None):
-        """Resume from the latest checkpoint if one exists."""
-        try:
-            state, step = self.ckpt.restore(state_like, shardings=shardings)
+        """Resume from the newest restorable checkpoint.
+
+        A corrupt latest checkpoint (failed sha256, truncated npy,
+        mangled manifest — e.g. a disk fault after the atomic rename)
+        must not strand the job: the restore falls back through the
+        retained older checkpoints newest-first, counting each skip
+        (``ckpt_resume_fallbacks_total``), and only reports a cold start
+        when every retained checkpoint is unusable."""
+        for s in self.ckpt.available_steps():
+            try:
+                state, step = self.ckpt.restore(state_like, step=s,
+                                                shardings=shardings)
+            except (OSError, ValueError, KeyError, EOFError):
+                obs.metric("ckpt_resume_fallbacks_total").inc()
+                obs.instant("train:resume_fallback", step=s)
+                continue
             if self.pipeline is not None:
                 self.pipeline.skip_to(step + 1)
             return state, step + 1
-        except FileNotFoundError:
-            return None, 0
+        return None, 0
 
 
 @dataclasses.dataclass

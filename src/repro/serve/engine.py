@@ -107,6 +107,10 @@ class ServeEngine:
                 from repro import sched
                 self.kv_plan_cache = sched.default_cache()
             self.kv_compressor = Compressor(codec_name="packed")
+        # KV-wire integrity recovery: re-pack budget per shipment, and a
+        # test seam that interposes on the packed wire (chaos injection)
+        self._kv_max_tries = 3
+        self.kv_fault_injector: Optional[Callable] = None
         self.prefill_step = jax.jit(build_prefill_step(cfg))
         self.decode_step = jax.jit(build_decode_step(cfg))
         self._splice = jax.jit(self._splice_impl, donate_argnums=(0,))
@@ -137,12 +141,26 @@ class ServeEngine:
         raises (the sender consults acks, so it means a protocol bug or a
         lost ack — the caller should re-request a full send).  Decode
         shapes are unchanged, so the jitted prefill/decode steps never
-        re-specialize.  Returns the new version."""
-        from repro.sync.engine import apply_update
+        re-specialize.  Returns the new version.
 
+        Integrity: updates carrying a checksum are verified BEFORE the
+        fence or any apply — a corrupt payload raises
+        ``WireIntegrityError`` (counted under
+        ``serve_ingest_rejects_total{reason="checksum"}``) and the
+        engine's weights are untouched; the sender should re-send,
+        escalating delta -> full -> raw (``sync/fleet.py``)."""
+        from repro.core.integrity import WireIntegrityError
+        from repro.sync.engine import apply_update, verify_update
+
+        if update.checksum is not None and not verify_update(update):
+            obs.metric("serve_ingest_rejects_total").inc(reason="checksum")
+            raise WireIntegrityError(
+                f"update v{update.version} failed its payload checksum; "
+                f"re-send it (escalate delta -> full -> raw)")
         if update.base_version is not None:
             if (update.base_version != self.weight_version
                     or update.epoch != self.weight_epoch):
+                obs.metric("serve_ingest_rejects_total").inc(reason="fence")
                 raise ValueError(
                     f"delta update v{update.version} assumes base "
                     f"v{update.base_version}@e{update.epoch} but this engine "
@@ -230,14 +248,34 @@ class ServeEngine:
         compiles it, every later admission of the same-shaped cache is a
         plan-cache hit — zero re-derived decisions per request.  The wire
         is bit-exact, so PD-disaggregated serving emits exactly the tokens
-        colocated serving would."""
+        colocated serving would.
+
+        Integrity: the wire carries a checksum (``pack_cache``) that
+        ``unpack_cache`` verifies before decoding; on mismatch the
+        shipment is re-packed from the still-held prefill cache — a
+        bounded retry (``_kv_max_tries``) counted under
+        ``serve_kv_retries_total``.  ``kv_fault_injector`` (None outside
+        tests) interposes on the wire between pack and unpack — the
+        chaos hook for corrupting shipments in flight."""
+        from repro.core.integrity import WireIntegrityError
         from repro.serve.kv_transfer import ship_cache, unpack_cache
 
         with obs.span("serve:kv_ship"):
-            wire, _ = ship_cache(one_cache, self.kv_compressor,
-                                 policy=self.kv_policy,
-                                 plan_cache=self.kv_plan_cache)
-            return unpack_cache(wire, self.kv_compressor)
+            last_err = None
+            for _ in range(max(self._kv_max_tries, 1)):
+                wire, _ = ship_cache(one_cache, self.kv_compressor,
+                                     policy=self.kv_policy,
+                                     plan_cache=self.kv_plan_cache)
+                if self.kv_fault_injector is not None:
+                    wire = self.kv_fault_injector(wire)
+                try:
+                    return unpack_cache(wire, self.kv_compressor)
+                except WireIntegrityError as e:
+                    last_err = e
+                    obs.metric("serve_kv_retries_total").inc()
+            raise WireIntegrityError(
+                f"KV shipment failed integrity {self._kv_max_tries} times"
+            ) from last_err
 
     def _next_key(self):
         self._key, k = jax.random.split(self._key)

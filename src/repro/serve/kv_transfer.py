@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import codec
+from repro.core import codec, integrity
 from repro.core.policy import CompressionPolicy
 from repro.core.split_send import p2p_send
 
@@ -114,7 +114,11 @@ def pack_cache(cache, engine, plan=None) -> dict:
     leaf bit-exactly.  ``plan`` (a compiled kind-"kv" ``CommPlan``) hands
     the engine its recorded per-dtype codec widths, replacing the
     per-first-call ``calibrate.choose_width`` probe — the decided-once
-    schedule shared with the in-mesh wire."""
+    schedule shared with the in-mesh wire.
+
+    The wire carries a CRC-32 ``"checksum"`` over (messages, meta) —
+    the integrity envelope of the out-of-band shipment.  ``unpack_cache``
+    verifies it before decoding anything."""
     leaves, comp, raw = _bucket_leaves(cache)
     msgs, meta = [], []
     for i, l in enumerate(leaves):
@@ -130,12 +134,31 @@ def pack_cache(cache, engine, plan=None) -> dict:
         "messages": msgs,
         "treedef": jax.tree_util.tree_structure(cache),
         "meta": meta,
+        "checksum": integrity.crc32_tree((msgs, meta)),
     }
 
 
-def unpack_cache(wire: dict, engine):
+def verify_wire(wire: dict) -> bool:
+    """True iff the packed wire's payload still matches its checksum.
+    Wires from older packers (no ``"checksum"`` key) verify vacuously —
+    they predate the envelope."""
+    c = wire.get("checksum")
+    if c is None:
+        return True
+    return integrity.crc32_tree((wire["messages"], wire["meta"])) == c
+
+
+def unpack_cache(wire: dict, engine, *, verify: bool = True):
     """Inverse of :func:`pack_cache` (bit-exact regardless of whether the
-    pack was plan-driven: the width travels inside each message)."""
+    pack was plan-driven: the width travels inside each message).
+
+    Verifies the wire's integrity checksum first (when present) and
+    raises :class:`~repro.core.integrity.WireIntegrityError` on
+    mismatch — a corrupt shipment is rejected before any decode, and the
+    caller re-packs (``ServeEngine._ship_kv``'s bounded retry)."""
+    if verify and not verify_wire(wire):
+        raise integrity.WireIntegrityError(
+            "packed KV wire failed its content checksum; re-ship it")
     out = []
     for msg, (kind, shape, dtype) in zip(wire["messages"], wire["meta"]):
         if kind == "z":

@@ -12,10 +12,21 @@ or epoch-fenced.  The schedule compiles ONCE into a kind-"wsync"
 by construction.  ``serve/engine.ServeEngine.ingest_weights`` hot-swaps
 a running decode loop from the stream; ``train/step.make_publish_hook``
 bridges the trainer side.
+
+Robustness: every ``SyncUpdate`` carries a payload CRC envelope
+(``update_checksum``/``verify_update``), and :class:`SyncFleet`
+(``sync/fleet.py``) drives trainer + N replicas through straggler-
+tolerant publish/distribute/ack rounds with bounded retries, the
+delta -> full -> raw escalation ladder, mid-epoch join/leave, and
+checkpointed trainer failover — deterministically replayable under an
+injected ``runtime/faults.FaultPlan``.
 """
-from repro.sync.engine import (SyncUpdate, WeightSyncEngine, apply_update)
+from repro.sync.engine import (SyncUpdate, WeightSyncEngine, apply_update,
+                               update_checksum, verify_update)
+from repro.sync.fleet import FleetConfig, Replica, SyncFleet
 from repro.sync.store import VersionedStore
 from repro.sync.wire import sync_weights
 
-__all__ = ["SyncUpdate", "VersionedStore", "WeightSyncEngine",
-           "apply_update", "sync_weights"]
+__all__ = ["FleetConfig", "Replica", "SyncFleet", "SyncUpdate",
+           "VersionedStore", "WeightSyncEngine", "apply_update",
+           "sync_weights", "update_checksum", "verify_update"]

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.core import codec, packing
+from repro.core import codec, integrity, packing
 from repro.core.policy import CompressionPolicy
 from repro.sched.plan import PATH_COMPRESSED
 from repro.sync.store import VersionedStore
@@ -40,6 +40,10 @@ from repro.sync.store import VersionedStore
 MODE_DELTA = "delta"
 MODE_FULL = "full"
 MODE_RAW = "raw"
+
+# recovery-escalation ladder (sync/fleet.py): a rejected delta re-sends
+# full; a rejected full re-sends raw — the simplest possible wire last
+FORCE_MODES = (None, MODE_FULL, MODE_RAW)
 
 
 def _raw_wire(bucket, dtype_name):
@@ -69,7 +73,14 @@ class SyncUpdate:
     ``MODE_DELTA`` bucket must be decoded against that version's bits (the
     receiver's current weights — ``apply_update(base_params=...)``).
     ``buckets`` carry (dtype_name, members, mode, message) per plan
-    bucket; ``raw_leaves`` the codec-unsupported leaves."""
+    bucket; ``raw_leaves`` the codec-unsupported leaves.
+
+    ``checksum`` is the CRC-32 integrity envelope over the PAYLOAD
+    (bucket schedule + packed planes + raw leaves — see
+    :func:`update_checksum`); receivers must verify it before applying
+    (``verify_update``).  The (version, epoch, base) fields are excluded
+    on purpose: they are fenced against the receiver's own state, which
+    a checksum could not strengthen."""
 
     version: int
     epoch: int
@@ -80,6 +91,7 @@ class SyncUpdate:
     raw_leaves: tuple  # ((leaf_index, ndarray), ...)
     wire_bytes: int
     raw_bytes: int
+    checksum: Optional[int] = None
 
     @property
     def mode(self) -> str:
@@ -122,6 +134,26 @@ def apply_update(update: SyncUpdate, base_params=None):
     for i, arr in update.raw_leaves:
         leaves[i] = jnp.asarray(arr)
     return jax.tree_util.tree_unflatten(update.treedef, leaves)
+
+
+def update_checksum(update: SyncUpdate) -> int:
+    """CRC-32 over the update's payload: bucket schedule (dtype, members,
+    mode), every message array, and the raw leaves.  Cheap relative to
+    the encode it protects, and a single flipped wire bit changes it."""
+    c = integrity.crc32_tree(update.n_leaves)
+    for dtype_name, members, mode, msg in update.buckets:
+        c = integrity.crc32_tree((dtype_name, members, mode, msg), seed=c)
+    return integrity.crc32_tree(update.raw_leaves, seed=c)
+
+
+def verify_update(update: SyncUpdate) -> bool:
+    """True iff the update carries a checksum and its payload still
+    matches it.  Receivers (fleet replicas, ``ServeEngine.
+    ingest_weights``) call this BEFORE ``apply_update`` — a False means
+    reject-and-renegotiate (nack, escalate delta -> full -> raw), never
+    apply."""
+    return (update.checksum is not None
+            and update_checksum(update) == update.checksum)
 
 
 class WeightSyncEngine:
@@ -170,33 +202,46 @@ class WeightSyncEngine:
             params, self.axis_name, policy=self.policy, n_dev=1,
             strategy=self.strategy, cache=self.plan_cache)
 
-    def update_for(self, replica) -> SyncUpdate:
+    def update_for(self, replica, *, force: Optional[str] = None
+                   ) -> SyncUpdate:
         """Encode the latest version for ``replica``: XOR delta against its
         acked base when possible (a replica that is already current gets
         the all-zero delta — far cheaper than a full re-send), full
         otherwise (stale/absent/fenced ack, raw-gated buckets, or
         per-bucket delta overflow).  Updates are memoized per (latest
-        version, base version): broadcasting to N replicas with the same
-        ack encodes once."""
+        version, base version, force): broadcasting to N replicas with
+        the same ack encodes once.
+
+        ``force`` is the recovery-escalation override (``sync/fleet.py``):
+        ``"full"`` skips the delta route even when a base is acked (the
+        receiver rejected or lost a delta); ``"raw"`` additionally ships
+        every bucket uncompressed — the last-resort wire after repeated
+        integrity failures."""
+        if force not in FORCE_MODES:
+            raise ValueError(f"force must be one of {FORCE_MODES}, "
+                             f"got {force!r}")
         with obs.span("sync:update", replica=str(replica)) as sp:
             params, version = self.store.latest()
-            base_version = self.store.base_for(replica)
+            base_version = (None if force is not None
+                            else self.store.base_for(replica))
             sp.args["version"] = version
-            cached = self._updates.get(base_version)
+            key = (base_version, force)
+            cached = self._updates.get(key)
             if cached is not None:
                 obs.instant("sync:memo_hit", version=version,
                             base=base_version)
                 obs.metric("sync_memo_hits_total").inc()
                 return cached
-            update = self._encode_update(params, version, base_version)
-            self._updates[base_version] = update
+            update = self._encode_update(params, version, base_version,
+                                         force=force)
+            self._updates[key] = update
         obs.metric("sync_updates_total").inc(mode=update.mode)
         obs.metric("sync_update_wire_bytes_total").inc(update.wire_bytes,
                                                        mode=update.mode)
         return update
 
-    def _encode_update(self, params, version: int,
-                       base_version) -> SyncUpdate:
+    def _encode_update(self, params, version: int, base_version,
+                       force: Optional[str] = None) -> SyncUpdate:
         base = self.store.get(base_version) if base_version is not None \
             else None
         plan = self.plan_for(params)
@@ -212,7 +257,7 @@ class WeightSyncEngine:
             for b in plan.buckets:
                 bucket = codec.concat_members(leaves, b.members)
                 mode, msg = MODE_RAW, None
-                if b.path == PATH_COMPRESSED:
+                if b.path == PATH_COMPRESSED and force != MODE_RAW:
                     # pad to the block grid like the in-mesh wire, so the
                     # plan's eval_shape accounting IS this wire's size (and
                     # overflow thresholds match delta_send exactly)
@@ -254,13 +299,15 @@ class WeightSyncEngine:
         wire += sum(arr.nbytes for _, arr in raw_leaves)
         raw_total = sum(l.size * jnp.dtype(l.dtype).itemsize
                         for l in leaves if hasattr(l, "dtype"))
-        return SyncUpdate(
+        update = SyncUpdate(
             version=version, epoch=self.store.epoch,
             base_version=base_version if used_delta else None,
             treedef=jax.tree_util.tree_structure(params),
             n_leaves=len(leaves), buckets=tuple(buckets),
             raw_leaves=raw_leaves, wire_bytes=int(wire),
             raw_bytes=int(raw_total))
+        update.checksum = update_checksum(update)
+        return update
 
     def ack(self, replica, version: int, epoch: Optional[int] = None) -> bool:
         """Record a replica's applied version (epoch-fenced)."""

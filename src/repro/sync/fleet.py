@@ -1,0 +1,452 @@
+"""Elastic weight-sync fleet: trainer + N replicas under injected chaos.
+
+``WeightSyncEngine`` encodes updates; this module owns the *protocol*
+around them — the part the paper's RL result (§5.3.1) silently assumes
+works: every replica eventually holds the latest published version
+bit-exactly, even while messages drop, payloads corrupt, replicas come
+and go, and the trainer itself restarts.
+
+:class:`SyncFleet` drives publish/distribute/ack rounds over a
+:class:`~repro.runtime.faults.FaultyWire`:
+
+  * **Straggler-tolerant acks** — a round never blocks on a slow or
+    unreachable replica: a missing response is a per-replica timeout that
+    schedules a bounded-backoff retry; everyone else proceeds.
+  * **Integrity + negative acks** — replicas verify every update's
+    CRC envelope (``sync.engine.verify_update``) and its (epoch, version,
+    base) fence BEFORE applying; a rejection is an explicit nack that
+    escalates the next send one rung down the ladder delta -> full ->
+    raw (``update_for(force=...)``).  Corruption is *detected and
+    recovered*, never applied.
+  * **Bounded retries + quarantine** — per-replica failure counters feed
+    exponential backoff (``FleetConfig.backoff_*``); a replica that
+    exhausts ``max_retries`` is quarantined (counted, excluded from
+    convergence) instead of wedging the fleet.
+  * **Elasticity** — ``kill``/``join`` mid-epoch: a dead replica's
+    messages evaporate; a joiner has no ack and is served the full wire.
+  * **Trainer failover** — ``restart_trainer()`` restores the
+    ``VersionedStore`` from its latest ``CheckpointManager`` snapshot
+    (taken every ``ckpt_every_publishes`` publishes, so a crash can
+    REWIND versions) and replays the epoch fence: ``advance_epoch()``
+    forces full sends until every replica re-acks under the new epoch —
+    the only safe posture when version numbers may repeat with
+    different bits.
+
+Everything is deterministic given a seeded
+:class:`~repro.runtime.faults.FaultPlan`: the recovery trace
+(``SyncFleet.trace``) replays exactly, which is what makes the chaos
+gate (``benchmarks/fig_faults.py``, ``tests/test_faults.py``) a real
+assertion and a failing seed a reproducible bug report.
+"""
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+from typing import Optional
+
+import numpy as np
+
+from repro import obs
+from repro.runtime.faults import FaultPlan, FaultyWire
+from repro.sync.engine import (MODE_FULL, MODE_RAW, WeightSyncEngine,
+                               apply_update, verify_update)
+from repro.sync.store import VersionedStore
+
+TRAINER = "trainer"  # the wire address acks/nacks travel to
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Protocol knobs.  The retry budget is per replica per incident
+    streak: ``failures`` resets on every accepted ack."""
+
+    max_retries: int = 8  # consecutive failures before quarantine
+    backoff_base: int = 1  # rounds skipped after the 1st failure
+    backoff_factor: float = 2.0
+    backoff_cap: int = 4  # backoff never exceeds this many rounds
+    history: int = 4  # VersionedStore retention
+    ckpt_dir: Optional[str] = None  # lazily tmpdir'd when unset
+    ckpt_every_publishes: int = 1  # store snapshot cadence
+
+
+class Replica:
+    """A simulated inference replica: verifies, fences, applies, acks.
+
+    The apply path mirrors ``serve.ServeEngine.ingest_weights`` — the
+    checksum gate first (corruption never reaches ``apply_update``),
+    then the delta base/epoch fence — but answers with protocol
+    messages instead of exceptions, because in a fleet the *sender*
+    owns recovery."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.params = None
+        self.version: Optional[int] = None
+        self.epoch: Optional[int] = None
+        self.alive = True
+        self.applied = 0
+        self.rejects = {"checksum": 0, "base_fence": 0}
+        self.stale_seen = 0
+
+    def receive(self, update) -> dict:
+        """Process one delivered update -> an ack or nack message."""
+        if not verify_update(update):
+            self.rejects["checksum"] += 1
+            obs.metric("sync_integrity_failures_total").inc(
+                reason="checksum")
+            return {"type": "nack", "replica": self.name,
+                    "reason": "checksum", "version": update.version}
+        if (self.version is not None and update.epoch == self.epoch
+                and update.version <= self.version):
+            # duplicate or reordered-stale delivery: idempotent re-ack of
+            # what we actually hold (the ack itself may have been lost)
+            self.stale_seen += 1
+            return {"type": "ack", "replica": self.name,
+                    "version": self.version, "epoch": self.epoch}
+        if update.base_version is not None:
+            if (self.params is None or update.base_version != self.version
+                    or update.epoch != self.epoch):
+                # XOR against any other bits would be garbage: fence it
+                self.rejects["base_fence"] += 1
+                obs.metric("sync_integrity_failures_total").inc(
+                    reason="base_fence")
+                return {"type": "nack", "replica": self.name,
+                        "reason": "base_fence", "version": update.version}
+            self.params = apply_update(update, base_params=self.params)
+        else:
+            self.params = apply_update(update)
+        self.version, self.epoch = update.version, update.epoch
+        self.applied += 1
+        return {"type": "ack", "replica": self.name,
+                "version": self.version, "epoch": self.epoch}
+
+
+class _Link:
+    """Trainer-side per-replica protocol state."""
+
+    __slots__ = ("failures", "escalation", "next_try", "quarantined")
+
+    def __init__(self):
+        self.reset_hard()
+
+    def reset(self):  # accepted ack: the path works again
+        self.failures = 0
+        self.escalation = 0
+        self.next_try = 0
+
+    def reset_hard(self):  # link creation / trainer restart
+        self.reset()
+        self.quarantined = False
+
+
+class SyncFleet:
+    """Round-driven trainer + N simulated replicas (module docstring)."""
+
+    def __init__(self, engine: WeightSyncEngine, replica_names,
+                 *, cfg: FleetConfig = None, wire: FaultyWire = None,
+                 fault_plan: Optional[FaultPlan] = None):
+        self.engine = engine
+        self.cfg = cfg or FleetConfig()
+        # one plan object drives BOTH seams: the wire's message faults
+        # and the fleet's lifecycle events, off one seed
+        self.fault_plan = fault_plan
+        self.wire = wire if wire is not None else FaultyWire(fault_plan)
+        self.replicas: dict = {}
+        self._links: dict = {}
+        self._round = 0
+        self._publishes = 0
+        self._ckpt = None
+        self.trace: list = []  # (round, event string) — deterministic
+        self.stats = {"retries": 0, "timeouts": 0, "nacks": 0,
+                      "escalations": 0, "quarantines": 0,
+                      "corrupt_seen": 0, "corrupt_lost": 0,
+                      "checksum_rejects": 0, "fence_rejects": 0,
+                      "max_link_failures": 0, "trainer_restarts": 0}
+        for name in replica_names:
+            self._add_replica(name)
+
+    # -- membership ----------------------------------------------------------
+
+    def _add_replica(self, name: str) -> Replica:
+        rep = Replica(name)
+        self.replicas[name] = rep
+        self._links[name] = _Link()
+        self._export_live()
+        return rep
+
+    def join(self, name: str) -> Replica:
+        """Mid-epoch join: no ack on file -> served the full wire."""
+        rep = self.replicas.get(name)
+        if rep is not None and rep.alive:
+            return rep
+        self.trace.append((self._round, f"join {name}"))
+        return self._add_replica(name)
+
+    def kill(self, name: str) -> None:
+        """Mid-epoch leave/crash: in-flight messages to it evaporate."""
+        rep = self.replicas.get(name)
+        if rep is None or not rep.alive:
+            return
+        rep.alive = False
+        rep.params = None  # its memory is gone
+        self.trace.append((self._round, f"kill {name}"))
+        self._export_live()
+
+    def live_replicas(self) -> tuple:
+        return tuple(n for n, r in self.replicas.items() if r.alive)
+
+    def _targets(self) -> tuple:
+        """Replicas the protocol still owes convergence: live and not
+        quarantined."""
+        return tuple(n for n in self.live_replicas()
+                     if not self._links[n].quarantined)
+
+    def _export_live(self):
+        obs.metric("fleet_live_replicas").set(len(self.live_replicas()))
+
+    # -- trainer lifecycle ---------------------------------------------------
+
+    def ckpt(self):
+        if self._ckpt is None:
+            from repro.checkpoint.manager import CheckpointManager
+
+            d = self.cfg.ckpt_dir or tempfile.mkdtemp(prefix="fleet_ckpt_")
+            self._ckpt = CheckpointManager(d, keep=3)
+        return self._ckpt
+
+    def publish(self, params) -> int:
+        """Publish a new version; snapshots the store to the checkpoint
+        every ``ckpt_every_publishes`` publishes (the failover point a
+        later ``restart_trainer`` rewinds to)."""
+        version = self.engine.publish(params)
+        self._publishes += 1
+        if self._publishes % max(self.cfg.ckpt_every_publishes, 1) == 0:
+            self.ckpt().save(self._publishes,
+                             self.engine.store.state_dict())
+        self.trace.append((self._round, f"publish v{version}"))
+        return version
+
+    def restart_trainer(self) -> None:
+        """Simulated trainer failover: all trainer-side state (store,
+        acks, links, memoized encodes) is lost; the ``VersionedStore``
+        is rebuilt from the latest checkpoint snapshot — possibly
+        REWINDING versions — and the epoch fence is replayed so every
+        next send is full until replicas re-ack under the new epoch."""
+        with obs.span("fleet:restart", round=self._round):
+            ckpt = self.ckpt()
+            if ckpt.latest_step() is None:
+                # nothing snapshotted yet: flush one now (a real trainer
+                # checkpoints before it serves — cold-start protection)
+                ckpt.save(self._publishes, self.engine.store.state_dict())
+            state_like = self.engine.store.state_dict()
+            restored, _ = ckpt.restore(state_like)
+            old = self.engine
+            self.engine = WeightSyncEngine(
+                policy=old.policy, axis_name=old.axis_name,
+                strategy=old.strategy, history=self.cfg.history,
+                plan_cache=old.plan_cache)
+            self.engine.store = VersionedStore.from_state_dict(
+                restored, history=self.cfg.history)
+            self.engine.advance_epoch()  # the fence: full sends only
+            for link in self._links.values():
+                link.reset_hard()  # trainer-side memory is gone
+        self.stats["trainer_restarts"] += 1
+        self.trace.append((self._round,
+                           f"trainer_restart v{self.engine.store.version}"
+                           f"@e{self.engine.store.epoch}"))
+
+    # -- the round -----------------------------------------------------------
+
+    def round(self) -> dict:
+        """One distribute/ack round: lifecycle events fire, the wire
+        advances (matured delayed messages surface), the trainer sends to
+        every owed replica whose backoff allows it, replicas verify/
+        fence/apply and respond, and unanswered sends become timeouts.
+        Never blocks on any single replica."""
+        self._round += 1
+        with obs.span("fleet:round", round=self._round):
+            obs.metric("fleet_rounds_total").inc()
+            if self.fault_plan is not None:
+                for ev in self.fault_plan.events_for_round(self._round):
+                    self._apply_event(ev)
+            self.wire.advance_round()
+            sent = self._send_updates()
+            self._deliver_to_replicas()
+            responded = self._drain_trainer()
+            for name in sent - responded:
+                self.stats["timeouts"] += 1
+                # a lost message is not a corrupt one: retry at the same
+                # escalation rung, just later
+                self._record_failure(name, escalate=False, reason="timeout")
+        return {"round": self._round, "sent": len(sent),
+                "responded": len(responded)}
+
+    def _apply_event(self, ev) -> None:
+        if ev.kind == "kill":
+            self.kill(ev.target)
+        elif ev.kind == "join":
+            self.join(ev.target)
+        elif ev.kind == "trainer_restart":
+            self.restart_trainer()
+        else:
+            raise ValueError(f"unknown lifecycle fault {ev.kind!r}")
+
+    def _send_updates(self) -> set:
+        store = self.engine.store
+        sent = set()
+        if store.version == 0:
+            return sent  # nothing published yet
+        for name in self._targets():
+            link = self._links[name]
+            if self._round < link.next_try:
+                continue  # backing off — the round does NOT wait
+            if (store.acked_version(name) == store.version
+                    and link.escalation == 0):
+                continue  # trainer-side view: already current
+            force = (None, MODE_FULL, MODE_RAW)[link.escalation]
+            update = self.engine.update_for(name, force=force)
+            self.wire.send(name, update)
+            sent.add(name)
+        return sent
+
+    def _deliver_to_replicas(self) -> None:
+        for name, rep in self.replicas.items():
+            for payload, corrupted in self.wire.drain(name,
+                                                      with_flags=True):
+                if not rep.alive:
+                    # messages to a dead replica evaporate; corrupted
+                    # ones are accounted so the chaos gate's ledger
+                    # (injected == detected + lost) stays exact
+                    if corrupted:
+                        self.stats["corrupt_lost"] += 1
+                    continue
+                if corrupted:
+                    self.stats["corrupt_seen"] += 1
+                resp = rep.receive(payload)
+                self.wire.send(TRAINER, resp)
+
+    def _drain_trainer(self) -> set:
+        responded = set()
+        for resp in self.wire.drain(TRAINER):
+            name = resp["replica"]
+            link = self._links.get(name)
+            rep = self.replicas.get(name)
+            if link is None or rep is None or not rep.alive:
+                continue
+            responded.add(name)
+            if resp["type"] == "ack":
+                if self.engine.ack(name, resp["version"], resp["epoch"]):
+                    link.reset()  # the path works: clear the streak
+                # a fenced (old-epoch) ack is ignored; the full send
+                # already in flight will produce a current one
+            else:
+                self.stats["nacks"] += 1
+                self.stats[{"checksum": "checksum_rejects",
+                            "base_fence": "fence_rejects"}[
+                                resp["reason"]]] += 1
+                self._record_failure(name, escalate=True,
+                                     reason=resp["reason"])
+        return responded
+
+    def _record_failure(self, name: str, *, escalate: bool,
+                        reason: str) -> None:
+        link = self._links[name]
+        if link.quarantined:
+            return
+        link.failures += 1
+        self.stats["retries"] += 1
+        self.stats["max_link_failures"] = max(
+            self.stats["max_link_failures"], link.failures)
+        obs.metric("fleet_retries_total").inc()
+        if escalate and link.escalation < 2:
+            link.escalation += 1
+            self.stats["escalations"] += 1
+            obs.metric("fleet_escalations_total").inc(
+                to=(MODE_FULL, MODE_RAW)[link.escalation - 1])
+            self.trace.append((
+                self._round,
+                f"escalate {name} -> "
+                f"{(MODE_FULL, MODE_RAW)[link.escalation - 1]} "
+                f"({reason})"))
+        if link.failures > self.cfg.max_retries:
+            link.quarantined = True
+            self.stats["quarantines"] += 1
+            obs.metric("fleet_quarantines_total").inc()
+            self.trace.append((self._round, f"quarantine {name}"))
+            return
+        backoff = min(
+            int(self.cfg.backoff_base
+                * self.cfg.backoff_factor ** (link.failures - 1)),
+            self.cfg.backoff_cap)
+        link.next_try = self._round + max(backoff, 1)
+
+    # -- convergence ---------------------------------------------------------
+
+    def converged(self) -> bool:
+        """Trainer-view convergence: every owed replica has an
+        epoch-current ack at the latest version.  (Acks are only sent
+        after a verified, fenced apply, so trainer-view convergence
+        implies replica truth; ``verify_bitexact`` double-checks the
+        bits independently.)"""
+        store = self.engine.store
+        return all(store.acked_version(n) == store.version
+                   for n in self._targets())
+
+    def settle(self, max_rounds: int = 200) -> int:
+        """Run rounds until convergence; returns the rounds it took.
+        Raises after ``max_rounds`` — under a finite fault schedule the
+        fleet must always converge."""
+        start = self._round
+        while not self.converged():
+            if self._round - start >= max_rounds:
+                raise RuntimeError(
+                    f"fleet failed to converge within {max_rounds} rounds "
+                    f"(round {self._round}, stats {self.stats})")
+            self.round()
+        rounds = self._round - start
+        obs.metric("fleet_convergence_rounds").set(rounds)
+        return rounds
+
+    def integrity_ledger(self) -> dict:
+        """The corruption accounting the chaos gate asserts over:
+
+        * ``injected`` — corruptions the wire actually applied;
+        * ``seen`` — corrupted deliveries that reached a LIVE replica;
+        * ``lost`` — corrupted deliveries that evaporated at a dead one;
+        * ``detected`` — replica-side checksum rejections (counted at
+          ``Replica.receive``, so a nack lost on the way back still
+          counts);
+        * ``silent`` — ``seen - detected``: corrupted updates a replica
+          accepted.  MUST be zero — anything else means a corruption got
+          past the checksum (trainer-side ``stats['checksum_rejects']``
+          can legitimately lag ``seen``: the nack itself can be dropped,
+          which surfaces as a timeout instead)."""
+        detected = sum(r.rejects["checksum"] for r in
+                       self.replicas.values())
+        return {"injected": self.wire.counts.get("corrupt", 0),
+                "seen": self.stats["corrupt_seen"],
+                "lost": self.stats["corrupt_lost"],
+                "detected": detected,
+                "silent": self.stats["corrupt_seen"] - detected}
+
+    def verify_bitexact(self) -> bool:
+        """The chaos gate's ground truth: every owed replica's params
+        equal the latest published tree in the uint domain (tobytes
+        compare — NaN payloads included)."""
+        import jax
+
+        params, _ = self.engine.store.latest()
+        ref = jax.tree_util.tree_leaves(params)
+        for name in self._targets():
+            rep = self.replicas[name]
+            if rep.params is None:
+                return False
+            got = jax.tree_util.tree_leaves(rep.params)
+            if len(got) != len(ref):
+                return False
+            for a, b in zip(ref, got):
+                na, nb = np.asarray(a), np.asarray(b)
+                if (na.shape != nb.shape or na.dtype != nb.dtype
+                        or na.tobytes() != nb.tobytes()):
+                    return False
+        return True

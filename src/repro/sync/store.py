@@ -115,3 +115,36 @@ class VersionedStore:
         self.epoch += 1
         self._acks.clear()
         return self.epoch
+
+    # -- failover persistence ------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """A checkpointable snapshot: the LATEST retained version plus the
+        (version, epoch) counters, as a flat array pytree that
+        ``checkpoint.manager.CheckpointManager`` can save directly.
+
+        One version is deliberately enough for failover: the restore path
+        must epoch-fence anyway (acks cannot be trusted across a restart),
+        so every post-restore send is full and the delta history rebuilds
+        itself from post-restore publishes."""
+        import numpy as np
+
+        params, version = self.latest()
+        return {"params": params,
+                "version": np.asarray(version, np.int64),
+                "epoch": np.asarray(self.epoch, np.int64)}
+
+    @classmethod
+    def from_state_dict(cls, state: dict, *, history: int = 4,
+                        copy_on_publish: bool = True) -> "VersionedStore":
+        """Rebuild a store from :meth:`state_dict` output (restored via
+        ``CheckpointManager.restore``).  The caller MUST fence afterwards
+        (``advance_epoch()`` — ``sync/fleet.SyncFleet.restart_trainer``
+        does): restored version numbers can repeat with different bits,
+        and only the fence keeps stale acks from turning that into a
+        corrupt delta base."""
+        st = cls(history=history, copy_on_publish=copy_on_publish)
+        st._version = int(state["version"])
+        st.epoch = int(state["epoch"])
+        st._versions[st._version] = _own_copy(state["params"])
+        return st

@@ -156,3 +156,46 @@ def test_obs_span_convention_documented():
     missing = [n for n, _, _ in SPANS if f"`{n}`" not in section]
     assert not missing, (
         f"Observability section does not mention spans: {missing}")
+
+
+# ---------------------------------------------------------------------------
+# Failure model section: the fault taxonomy IS runtime.faults.FAULT_KINDS
+# ---------------------------------------------------------------------------
+
+def _failure_section():
+    text = _doc_text()
+    m = re.search(r"^## Failure model[^\n]*\n(.*?)(?=^## )", text,
+                  re.MULTILINE | re.DOTALL)
+    assert m, "ARCHITECTURE.md has no '## Failure model' section"
+    return m.group(1)
+
+
+def test_failure_model_covers_every_fault_kind():
+    """Every injectable fault kind is documented in the failure-model
+    section — extending the taxonomy without documenting the recovery
+    story fails tier-1 (the plan-kind-table pattern applied to chaos)."""
+    from repro.runtime.faults import FAULT_KINDS
+
+    section = _failure_section()
+    missing = [k for k in FAULT_KINDS if f"`{k}`" not in section]
+    assert not missing, (
+        f"Failure-model section does not document fault kinds: {missing}")
+
+
+def test_failure_model_names_the_defense_layers():
+    """The recovery machinery the section promises actually exists."""
+    import importlib
+
+    section = _failure_section()
+    for ref in ("core/integrity.py", "sync/fleet.py", "runtime/faults.py"):
+        assert ref in section.replace("`", ""), (
+            f"Failure-model section does not reference {ref}")
+    for mod, attrs in [("repro.core.integrity",
+                        ("crc32_tree", "WireIntegrityError")),
+                       ("repro.runtime.faults",
+                        ("FaultPlan", "FaultyWire", "FAULT_KINDS")),
+                       ("repro.sync.fleet",
+                        ("SyncFleet", "FleetConfig"))]:
+        m = importlib.import_module(mod)
+        for a in attrs:
+            assert hasattr(m, a), (mod, a)

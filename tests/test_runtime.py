@@ -141,3 +141,91 @@ def test_heartbeat(tmpdir):
     with open(hb) as f:
         beat = json.load(f)
     assert beat["step"] == 1
+
+
+def test_heartbeat_atomic_write_and_age(tmpdir):
+    from repro.runtime.fault_tolerance import heartbeat_age, write_heartbeat
+
+    hb = os.path.join(tmpdir, "hb.json")
+    assert heartbeat_age(hb) is None  # missing file: no liveness signal
+    write_heartbeat(hb, 42)
+    # the tmp staging file must not survive the atomic publish
+    assert not os.path.exists(hb + ".tmp")
+    with open(hb) as f:
+        assert json.load(f)["step"] == 42
+    age = heartbeat_age(hb)
+    assert age is not None and 0.0 <= age < 30.0
+    # a truncated/garbage heartbeat reads as no signal, never a crash
+    with open(hb, "w") as f:
+        f.write('{"step": 4')
+    assert heartbeat_age(hb) is None
+    # re-publishing over garbage heals it (os.replace overwrites)
+    write_heartbeat(hb, 43)
+    assert heartbeat_age(hb) is not None
+
+
+def test_resume_falls_back_over_corrupt_checkpoints(tmpdir):
+    """A corrupt latest checkpoint must not strand the job: try_resume
+    walks back through retained checkpoints, newest first."""
+    state = {"w": jnp.arange(8.0)}
+
+    def step(s, batch):
+        return s, {"overflow": np.int32(0), "loss": np.float32(0.0)}
+
+    r = StepRunner(step, None, RunnerConfig(ckpt_dir=tmpdir, keep=3))
+    for s in (1, 2, 3):
+        r.ckpt.save(s, {"w": state["w"] + s})
+    assert r.ckpt.available_steps() == (3, 2, 1)
+    # corrupt the latest checkpoint's payload (bit rot after the rename)
+    d3 = os.path.join(tmpdir, "step_00000003")
+    fn = [f for f in os.listdir(d3) if f.endswith(".npy")][0]
+    with open(os.path.join(d3, fn), "r+b") as f:
+        f.seek(70)
+        f.write(b"\x00\xff\x00")
+    resumed, start = r.try_resume(jax.tree.map(jnp.zeros_like, state))
+    assert start == 3  # fell back to step 2, resumes at 2 + 1
+    assert bool(jnp.all(resumed["w"] == state["w"] + 2))
+
+    # every retained checkpoint corrupt -> clean cold start, no raise
+    for s in (1, 2):
+        d = os.path.join(tmpdir, f"step_{s:08d}")
+        os.remove(os.path.join(d, "manifest.json"))
+    resumed, start = r.try_resume(jax.tree.map(jnp.zeros_like, state))
+    assert resumed is None and start == 0
+
+
+def test_sigterm_preemption_checkpoint_and_bitexact_resume(tmpdir):
+    """The SIGTERM path: handler flushes a synchronous checkpoint of the
+    in-flight state; a fresh runner resumes it bit-exactly."""
+    import signal
+
+    from repro.data.pipeline import DataConfig, DataPipeline
+
+    def step(s, batch):
+        return ({"v": s["v"] + jnp.asarray(batch["tokens"]).sum()},
+                {"overflow": np.int32(0), "loss": np.float32(0.0)})
+
+    pipe = DataPipeline(DataConfig(vocab=50, global_batch=2, seq_len=4))
+    r = StepRunner(step, None,
+                   RunnerConfig(ckpt_dir=tmpdir, ckpt_every=1000),
+                   pipeline=pipe)
+    state, _ = r.train({"v": jnp.asarray(0)}, num_steps=5, log_every=0,
+                       log_fn=lambda *_: None)
+    # periodic cadence never fired (ckpt_every=1000): only the handler
+    # will persist anything
+    assert r.ckpt.latest_step() is None
+    r._on_sigterm(signal.SIGTERM, None)  # the eviction notice
+    assert r._stop  # the train loop would exit before the next step
+    assert r.ckpt.latest_step() == 4  # last completed step was flushed
+
+    r2 = StepRunner(step, None, RunnerConfig(ckpt_dir=tmpdir),
+                    pipeline=DataPipeline(
+                        DataConfig(vocab=50, global_batch=2, seq_len=4)))
+    resumed, start = r2.try_resume({"v": jnp.asarray(0)})
+    assert start == 5
+    assert int(resumed["v"]) == int(state["v"])  # bit-exact state
+    # and the resumed run continues from the exact pipeline position
+    state2, _ = r2.train(resumed, start_step=start, num_steps=1,
+                         log_every=0, log_fn=lambda *_: None)
+    ref = {"v": state["v"] + jnp.asarray(pipe.batch_at(5)["tokens"]).sum()}
+    assert int(state2["v"]) == int(ref["v"])
