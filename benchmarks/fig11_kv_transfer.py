@@ -30,6 +30,8 @@ from repro.models import transformer
 from repro.p2p.engine import Compressor, WireModel
 from repro.serve.kv_transfer import pack_cache, unpack_cache
 
+SMOKE_BUDGET_S = 30  # enforced by benchmarks.run --smoke
+
 
 def run_transfer_table():
     cfg = configs.get_smoke("tinyllama_1_1b")

@@ -32,6 +32,8 @@ import argparse
 
 from benchmarks.common import realistic_tensor, table, wall
 
+SMOKE_BUDGET_S = 30  # enforced by benchmarks.run --smoke
+
 
 def _abstract_mesh(k: int, name: str = "data"):
     from jax.sharding import AbstractMesh

@@ -34,6 +34,8 @@ import tempfile
 
 from benchmarks.common import table
 
+SMOKE_BUDGET_S = 30  # enforced by benchmarks.run --smoke
+
 
 def _make_params(n: int, seed: int = 0):
     import jax.numpy as jnp

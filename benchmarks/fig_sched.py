@@ -24,6 +24,8 @@ import time
 
 from benchmarks.common import table
 
+SMOKE_BUDGET_S = 30  # enforced by benchmarks.run --smoke
+
 
 def _abstract_mesh(k: int, name: str = "data"):
     from jax.sharding import AbstractMesh

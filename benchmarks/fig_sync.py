@@ -31,6 +31,8 @@ import argparse
 
 from benchmarks.common import table
 
+SMOKE_BUDGET_S = 30  # enforced by benchmarks.run --smoke
+
 
 def _make_params(n: int, seed: int = 0):
     import jax.numpy as jnp

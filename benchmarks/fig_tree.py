@@ -1,0 +1,230 @@
+"""Broadcast-schedule gate: tree/pipeline weight-sync egress vs star.
+
+The paper's RL weight-sync wire (§5.3.1) is trainer-fan-out bound: a
+star broadcast makes the trainer re-send the SAME encoded update to all
+N replicas.  A compiled :class:`~repro.sched.plan.BroadcastSchedule`
+(kind-"wsync" `CommPlan.broadcast`) moves the re-sends to interior
+replicas, which forward the received wire verbatim after their own CRC
+check — the trainer pays `root_degree` copies instead of N, at equal
+delta ratio (the bytes per receiver are byte-identical by the
+forwarding invariant).
+
+Gates (``--smoke``, < 30 s):
+
+  1. **egress** — at N=64 simulated replicas, the fanout-2 tree's
+     trainer egress on the delta wave is ≥ 4× below star (it is ~32×:
+     2 root sends vs 64);
+  2. **equal ratio** — wire bytes per receiver identical across
+     topologies, and egress + forwards sum to exactly N wires;
+  3. **convergence** — 100% ack convergence, every replica bit-exact
+     with the published tree, one encode per publish;
+  4. **chaos** — a seeded FaultPlan over the tree fleet ends bit-exact
+     with a balanced ledger and zero silent corruptions.
+
+Full mode sweeps fan-out (pipeline, 2, 4, 8, star) at N=64 and reports
+trainer egress, hop depth, settle rounds and sync-complete wall time
+vs star.
+
+Usage:
+  python -m benchmarks.fig_tree            # fan-out sweep
+  python -m benchmarks.fig_tree --smoke    # CI-gate mode
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import table
+
+SMOKE_BUDGET_S = 30  # enforced by benchmarks.run --smoke
+
+
+def _make_params(n: int, seed: int = 0):
+    import jax.numpy as jnp
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(0, 0.02, (n,)), jnp.bfloat16),
+        "b": jnp.asarray(rng.normal(0, 0.02, (n // 4,)), jnp.float32),
+    }
+
+
+def _step(params, seed: int):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+
+    def f(l):
+        x = np.asarray(l, np.float32)
+        return jnp.asarray(x * (1 + rng.normal(0, 8e-4, l.shape)), l.dtype)
+
+    return jax.tree.map(f, params)
+
+
+def _make_fleet(names, kind: str, fanout: int):
+    from repro.core.policy import CompressionPolicy
+    from repro.sync import FleetConfig, SyncFleet, WeightSyncEngine
+
+    eng = WeightSyncEngine(policy=CompressionPolicy(min_bytes=0))
+    cfg = FleetConfig(broadcast=kind, fanout=fanout,
+                      ckpt_every_publishes=10 ** 9)  # no checkpoint IO here
+    return SyncFleet(eng, names, cfg=cfg)
+
+
+def run_topology(kind: str, fanout: int, *, replicas: int = 64,
+                 n: int = 1 << 14, publishes: int = 2, seed: int = 0) -> dict:
+    """Drive one fleet through a full wave + ``publishes - 1`` delta
+    waves; returns the per-wave egress/forward accounting, with encodes
+    counted white-box (the one-encode-per-publish claim)."""
+    names = tuple(f"r{i:02d}" for i in range(replicas))
+    fleet = _make_fleet(names, kind, fanout)
+    encodes = []
+    orig = fleet.engine._encode_update
+
+    def counting(*a, **kw):
+        encodes.append(1)
+        return orig(*a, **kw)
+
+    fleet.engine._encode_update = counting
+    params = _make_params(n, seed=seed)
+    t0 = time.perf_counter()
+    fleet.publish(params)
+    fleet.settle()
+    full_egress = fleet.stats["trainer_egress_bytes"]
+    before = dict(fleet.stats)
+    for i in range(1, publishes):
+        params = _step(params, seed=100 + i)
+        fleet.publish(params)
+        fleet.settle()
+    wall = time.perf_counter() - t0
+    delta_waves = publishes - 1
+    egress = fleet.stats["trainer_egress_bytes"] - before[
+        "trainer_egress_bytes"]
+    fwd_bytes = fleet.stats["forward_bytes"] - before["forward_bytes"]
+    return {
+        "kind": kind, "fanout": fanout, "replicas": replicas,
+        "full_egress": full_egress,
+        "delta_egress": egress // max(delta_waves, 1),
+        "delta_forward_bytes": fwd_bytes // max(delta_waves, 1),
+        "wire_per_receiver": (egress + fwd_bytes) // max(
+            delta_waves * replicas, 1),
+        "hop_depth": fleet.stats["max_hop_depth"],
+        "encodes": len(encodes),
+        "publishes": publishes,
+        "converged": fleet.converged(),
+        "bitexact": fleet.verify_bitexact(),
+        "acked": all(fleet.engine.store.acked_version(nm)
+                     == fleet.engine.store.version for nm in names),
+        "wall_s": wall,
+    }
+
+
+def run_chaos_tree(seed: int = 7, *, replicas: int = 8) -> dict:
+    """The fig_faults invariants over a SCHEDULED fleet: forwarded hops
+    under drops/corruptions/delays and lifecycle events."""
+    import shutil
+    import tempfile
+
+    from repro.core.policy import CompressionPolicy
+    from repro.runtime.faults import FaultConfig, FaultPlan
+    from repro.sync import FleetConfig, SyncFleet, WeightSyncEngine
+
+    names = tuple(f"r{i}" for i in range(replicas))
+    fcfg = FaultConfig(seed=seed, rounds=10, drop_rate=0.1,
+                       corrupt_rate=0.1, delay_rate=0.1, max_delay=2,
+                       kills=1, joins=1, replicas=names)
+    ckpt_dir = tempfile.mkdtemp(prefix="fig_tree_")
+    try:
+        eng = WeightSyncEngine(policy=CompressionPolicy(min_bytes=0))
+        cfg = FleetConfig(ckpt_dir=ckpt_dir, broadcast="tree", fanout=2,
+                          max_retries=30, backoff_cap=2)
+        fleet = SyncFleet(eng, names, cfg=cfg,
+                          fault_plan=FaultPlan.generate(fcfg))
+        params = _make_params(1 << 12, seed=seed)
+        for r in range(10):
+            if r % 3 == 0:
+                params = _step(params, seed=200 + r)
+                fleet.publish(params)
+            fleet.round()
+        fleet.settle(max_rounds=80)
+        led = fleet.integrity_ledger()
+        return {"seed": seed, "ledger": led, "stats": dict(fleet.stats),
+                "bitexact": fleet.verify_bitexact(),
+                "converged": fleet.converged(),
+                "forwards": fleet.stats["forwards"]}
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+def _gate_smoke(star: dict, tree: dict, chaos: dict) -> None:
+    for r in (star, tree):
+        assert r["converged"] and r["acked"], (
+            f"{r['kind']}: fleet did not fully ack-converge")
+        assert r["bitexact"], f"{r['kind']}: a replica diverged"
+        assert r["encodes"] == r["publishes"], (
+            f"{r['kind']}: {r['encodes']} encodes for {r['publishes']} "
+            f"publishes — the broadcast re-encoded")
+    assert tree["wire_per_receiver"] == star["wire_per_receiver"], (
+        "delta ratio drifted across topologies: "
+        f"{tree['wire_per_receiver']} != {star['wire_per_receiver']} "
+        "bytes per receiver")
+    assert star["delta_egress"] >= 4 * tree["delta_egress"], (
+        f"tree egress gate: star {star['delta_egress']} < 4x tree "
+        f"{tree['delta_egress']}")
+    assert chaos["bitexact"] and chaos["converged"], (
+        f"chaos tree run diverged (ledger {chaos['ledger']})")
+    led = chaos["ledger"]
+    assert led["silent"] == 0, f"silent corruption under chaos: {led}"
+    assert led["injected"] == led["seen"] + led["lost"], (
+        f"chaos ledger does not balance: {led}")
+    assert chaos["forwards"] > 0, "chaos run never exercised a forward"
+
+
+def run(smoke: bool = False):
+    replicas = 64
+    if smoke:
+        sweep = [("star", 64), ("tree", 2)]
+    else:
+        sweep = [("star", 64), ("pipeline", 1), ("tree", 2), ("tree", 4),
+                 ("tree", 8)]
+    results = [run_topology(k, f, replicas=replicas) for k, f in sweep]
+    star = results[0]
+    rows = []
+    for r in results:
+        rows.append([
+            f"{r['kind']}/{r['fanout']}" if r["kind"] == "tree"
+            else r["kind"],
+            r["replicas"],
+            f"{r['delta_egress'] / 1024:.1f}",
+            f"{star['delta_egress'] / max(r['delta_egress'], 1):.1f}x",
+            f"{r['delta_forward_bytes'] / 1024:.1f}",
+            r["hop_depth"], r["encodes"],
+            "yes" if (r["bitexact"] and r["acked"]) else "NO",
+            f"{r['wall_s']:.2f}",
+        ])
+    table("Fig. tree — broadcast schedules: trainer egress vs star "
+          f"(N={replicas}, delta wave, equal ratio)",
+          ["topology", "N", "egress KiB", "vs star", "fwd KiB",
+           "hop depth", "encodes", "bit-exact+ack", "wall s"], rows)
+    chaos = run_chaos_tree()
+    print(f"  chaos tree (seed {chaos['seed']}): "
+          f"ledger {chaos['ledger']}, forwards {chaos['forwards']}, "
+          f"bit-exact {chaos['bitexact']}")
+    if smoke:
+        _gate_smoke(star, results[1], chaos)
+        ratio = star["delta_egress"] / max(results[1]["delta_egress"], 1)
+        print(f"  smoke gate: tree egress {ratio:.0f}x below star (>= 4x), "
+              f"one encode per publish, 100% ack convergence, zero silent "
+              f"corruptions")
+    return {"sweep": results, "chaos": chaos}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-gate mode (<30 s)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -1,15 +1,23 @@
 """Benchmark harness — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig7,fig9] [--json out.json]
+                                            [--smoke]
 
 ``--json`` additionally writes a machine-readable summary (per-module wall
 time / pass-fail / fallback counts, plus the obs metrics snapshot) without
 changing anything on stdout — CI diffs the file, humans read the console.
+
+``--smoke`` runs each module in its CI-gate configuration (``run(smoke=
+True)`` where the module supports it) and ENFORCES the module's stated
+wall-clock budget: a gate module declares ``SMOKE_BUDGET_S`` and a smoke
+run that exceeds it is a failure — "finishes fast" is part of the smoke
+contract (benchmarks/README.md), not a hope.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import json
 import os
 import sys
@@ -32,8 +40,16 @@ MODULES = [
     ("encode", "benchmarks.fig_encode"),
     ("sync", "benchmarks.fig_sync"),
     ("faults", "benchmarks.fig_faults"),
+    ("tree", "benchmarks.fig_tree"),
     ("obs", "repro.obs.dump"),
 ]
+
+
+def _supports_smoke(fn) -> bool:
+    try:
+        return "smoke" in inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
 
 
 def main():
@@ -42,6 +58,9 @@ def main():
                     help="comma-separated keys, e.g. fig7,fig9")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a machine-readable run summary to PATH")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-gate mode: run(smoke=True) where supported and "
+                         "enforce each module's SMOKE_BUDGET_S wall budget")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -59,15 +78,31 @@ def main():
         # once-per-op warning also re-arms, so each module logs its own).
         kernels.clear_fallbacks()
         ok = True
+        budget_s = None
         try:
             mod = importlib.import_module(modname)
-            mod.run()
+            if args.smoke and _supports_smoke(mod.run):
+                budget_s = getattr(mod, "SMOKE_BUDGET_S", None)
+                mod.run(smoke=True)
+            else:
+                mod.run()
             print(f"  [{key} done in {time.time()-t0:.1f}s]")
         except Exception:
             ok = False
             failures.append(key)
             print(f"  [{key} FAILED]")
             traceback.print_exc()
+        wall_s = round(time.time() - t0, 3)
+        # "finishes fast" is part of the smoke contract: a gate module
+        # that blows its declared budget fails the run even if its
+        # assertions passed
+        over_budget = bool(args.smoke and ok and budget_s is not None
+                           and wall_s > budget_s)
+        if over_budget:
+            ok = False
+            failures.append(key)
+            print(f"  [{key} OVER BUDGET: {wall_s:.1f}s > "
+                  f"SMOKE_BUDGET_S={budget_s}s]")
         # Surface silent fast-path degrades (kernels.record_fallback): a
         # benchmark that quietly ran reference fallbacks would otherwise
         # report numbers for a dispatch it never exercised.
@@ -77,7 +112,8 @@ def main():
         for op, c in per_module.items():
             total[op] = total.get(op, 0) + c
         modules_out.append({"key": key, "module": modname, "ok": ok,
-                            "wall_s": round(time.time() - t0, 3),
+                            "wall_s": wall_s, "budget_s": budget_s,
+                            "over_budget": over_budget,
                             "fallbacks": per_module})
     print(f"\nkernel fast-path fallbacks (all benchmarks): "
           f"{total if total else 'none'}")

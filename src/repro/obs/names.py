@@ -128,6 +128,21 @@ METRICS = (
     MetricSpec("fleet_convergence_rounds", "gauge", (),
                "sync/fleet.py",
                "rounds the last settle() took to converge the fleet"),
+    MetricSpec("fleet_trainer_egress_bytes_total", "counter", (),
+               "sync/fleet.py",
+               "update bytes the trainer itself put on the wire"),
+    MetricSpec("fleet_forwards_total", "counter", (),
+               "sync/fleet.py",
+               "interior-replica verbatim forwards of an encoded update"),
+    MetricSpec("fleet_forwarded_bytes_total", "counter", (),
+               "sync/fleet.py",
+               "update bytes re-sent verbatim by interior replicas"),
+    MetricSpec("fleet_hop_depth", "gauge", (),
+               "sync/fleet.py",
+               "deepest wire hop count any delivery has taken"),
+    MetricSpec("fleet_reparents_total", "counter", (),
+               "sync/fleet.py",
+               "subtree replicas re-parented to a direct trainer send"),
     # -- serve/engine.py (integrity/recovery)
     MetricSpec("serve_ingest_rejects_total", "counter", ("reason",),
                "serve/engine.py",
@@ -178,6 +193,8 @@ SPANS = (
      "one fleet distribute/ack round (events, sends, acks, timeouts)"),
     ("fleet:restart", "sync/fleet.py",
      "trainer failover: checkpoint restore + epoch fence"),
+    ("fleet:forward", "sync/fleet.py",
+     "instant: an interior replica forwarded the encoded wire verbatim"),
 )
 
 

@@ -173,6 +173,14 @@ def corrupt_payload(payload, rng):
         out[j] = integrity.flip_bit(arr, bit)
         return out
 
+    if hasattr(payload, "update") and hasattr(payload, "route"):
+        # sync.fleet.RoutedUpdate: a scheduled (forwarded-hop) delivery —
+        # corrupt the inner encoded wire, never the routing envelope, so
+        # the next hop's CRC check is what must catch it
+        bad = corrupt_payload(payload.update, rng)
+        if bad is None:
+            return None
+        return dataclasses.replace(payload, update=bad)
     if hasattr(payload, "buckets"):  # sync.SyncUpdate
         for bi in rng.permutation(len(payload.buckets)):
             dtn, members, mode, msg = payload.buckets[bi]

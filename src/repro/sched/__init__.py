@@ -17,6 +17,7 @@ from repro.sched.compile import (PLAN_KINDS, cached_fsdp_gather_plan,
                                  cached_kv_plan, cached_p2p_plan,
                                  cached_wsync_plan, cached_zero1_plan,
                                  compile_all_gather_plan,
+                                 compile_broadcast_schedule,
                                  compile_fsdp_gather_plan, compile_kv_plan,
                                  compile_p2p_plan, compile_psum_plan,
                                  compile_reduce_scatter_plan,
@@ -24,22 +25,27 @@ from repro.sched.compile import (PLAN_KINDS, cached_fsdp_gather_plan,
 from repro.sched.executor import (Zero1Execution, all_gather_with_plan,
                                   execute_kv_transfer, execute_p2p,
                                   execute_psum, execute_wsync,
-                                  gather_from_plan, p2p_send_with_plan,
-                                  psum_with_plan, reduce_scatter_with_plan,
+                                  execute_wsync_broadcast, gather_from_plan,
+                                  p2p_send_with_plan, psum_with_plan,
+                                  reduce_scatter_with_plan,
                                   sync_weights_with_plan,
-                                  transfer_cache_with_plan)
-from repro.sched.plan import BucketPlan, CommPlan, PhasePair
+                                  transfer_cache_with_plan, wsync_hop_perms)
+from repro.sched.plan import (BROADCAST_KINDS, BroadcastSchedule, BucketPlan,
+                              CommPlan, PhasePair)
 
 __all__ = [
-    "BucketPlan", "CommPlan", "PLAN_KINDS", "PhasePair", "PlanCache",
+    "BROADCAST_KINDS", "BroadcastSchedule", "BucketPlan", "CommPlan",
+    "PLAN_KINDS", "PhasePair", "PlanCache",
     "Zero1Execution", "all_gather_with_plan", "cache_info", "cache_stats",
     "cached_fsdp_gather_plan", "cached_kv_plan", "cached_p2p_plan",
     "cached_wsync_plan", "cached_zero1_plan", "compile_all_gather_plan",
+    "compile_broadcast_schedule",
     "compile_fsdp_gather_plan", "compile_kv_plan", "compile_p2p_plan",
     "compile_psum_plan", "compile_reduce_scatter_plan", "compile_wsync_plan",
     "compile_zero1_plan", "default_cache", "execute_kv_transfer",
-    "execute_p2p", "execute_psum", "execute_wsync", "gather_from_plan",
+    "execute_p2p", "execute_psum", "execute_wsync",
+    "execute_wsync_broadcast", "gather_from_plan",
     "load_plans", "p2p_send_with_plan", "psum_with_plan",
     "reduce_scatter_with_plan", "save_plans", "sync_weights_with_plan",
-    "transfer_cache_with_plan",
+    "transfer_cache_with_plan", "wsync_hop_perms",
 ]

@@ -155,7 +155,10 @@ class PlanCache:
 # key it was compiled under), so the file is just a tuple of plans.
 # ---------------------------------------------------------------------------
 
-_PLANS_VERSION = 1
+# v2: CommPlan grew the ``broadcast`` field (BroadcastSchedule) — files
+# pickled before it exist would restore instances missing the attribute,
+# so older versions are rejected rather than half-loaded
+_PLANS_VERSION = 2
 
 
 def save_plans(path: str, cache: "PlanCache" = None) -> int:

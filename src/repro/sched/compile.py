@@ -35,10 +35,12 @@ import numpy as np
 
 from repro.core import calibrate, codec
 from repro.core import compressed_collectives as cc
-from repro.sched.plan import (PATH_COMPRESSED, PATH_RAW, PATH_RAW_PSUM,
+from repro.sched.plan import (BROADCAST_KINDS, BROADCAST_PIPELINE,
+                              BROADCAST_STAR, BROADCAST_TREE,
+                              PATH_COMPRESSED, PATH_RAW, PATH_RAW_PSUM,
                               PATH_RAW_TWOSHOT, PATH_RING, PATH_TWO_SHOT,
-                              BucketPlan, CommPlan, PhasePair,
-                              policy_fingerprint, tree_signature)
+                              BroadcastSchedule, BucketPlan, CommPlan,
+                              PhasePair, policy_fingerprint, tree_signature)
 
 
 def axis_tuple(axis_name) -> tuple:
@@ -558,8 +560,35 @@ def delta_wire_bytes(n_padded: int, dtype, *, width: int, lo_width: int,
                for v in jax.tree_util.tree_leaves(m))
 
 
+def compile_broadcast_schedule(n_receivers: int, *, kind: str = BROADCAST_TREE,
+                               fanout: int = 2) -> BroadcastSchedule:
+    """Normalize (fleet size, requested kind, requested fan-out) into the
+    frozen :class:`BroadcastSchedule` record a wsync plan carries.
+
+    The effective fan-out is what makes all three kinds one arithmetic
+    family: ``star`` widens to ``n_receivers`` (every receiver a direct
+    trainer child), ``pipeline`` narrows to 1 (a forwarding chain), and
+    ``tree`` keeps the requested ``fanout`` (clamped to the fleet —
+    a 3-replica fleet at fanout 8 IS a star-shaped tree)."""
+    if kind not in BROADCAST_KINDS:
+        raise ValueError(f"unknown broadcast kind {kind!r}; expected one "
+                         f"of {BROADCAST_KINDS}")
+    if fanout < 1:
+        raise ValueError(f"fanout must be >= 1, got {fanout}")
+    n = int(n_receivers)
+    if kind == BROADCAST_STAR:
+        eff = max(n, 1)
+    elif kind == BROADCAST_PIPELINE:
+        eff = 1
+    else:
+        eff = min(int(fanout), max(n, 1))
+    return BroadcastSchedule(kind=kind, fanout=eff, n_receivers=n)
+
+
 def compile_wsync_plan(tree, axis_name, *, policy, n_dev: int,
                        strategy: str = "split_send",
+                       broadcast: str = None, fanout: int = 2,
+                       n_receivers: int = 0,
                        key: tuple = None) -> CommPlan:
     """Compile a weight-sync broadcast schedule (kind "wsync").
 
@@ -573,9 +602,20 @@ def compile_wsync_plan(tree, axis_name, *, policy, n_dev: int,
     version?); the plan records the schedule of BOTH paths so neither
     re-derives anything.  ``tree`` may hold arrays or ShapeDtypeStructs.
     The executor replays it through ``split_send.wsync_dispatch``
-    (``sched/executor.sync_weights_with_plan``)."""
+    (``sched/executor.sync_weights_with_plan``).
+
+    ``broadcast``/``fanout``/``n_receivers`` compile the host fan-out
+    topology into the plan (``CommPlan.broadcast``): who forwards the
+    encoded wire to whom when the fleet broadcasts one publish to
+    ``n_receivers`` same-base replicas.  ``broadcast=None`` (default)
+    leaves the plan receiver-count-agnostic — the legacy star behaviour
+    where the distributor sends every copy itself."""
     if strategy not in P2P_STRATEGIES:
         raise ValueError(f"unknown P2P strategy {strategy!r}")
+    schedule = None
+    if broadcast is not None:
+        schedule = compile_broadcast_schedule(
+            n_receivers, kind=broadcast, fanout=fanout)
     backend, use_pallas = probe_backend()
     axis = axis_tuple(axis_name)
     leaves, _ = jax.tree_util.tree_flatten(tree)
@@ -599,17 +639,26 @@ def compile_wsync_plan(tree, axis_name, *, policy, n_dev: int,
                     exc_frac=policy.profile.exc_frac))
         buckets.append(bucket)
     if key is None:
-        key = wsync_plan_key(tree, axis_name, policy, strategy, n_dev)
+        key = wsync_plan_key(tree, axis_name, policy, strategy, n_dev,
+                             broadcast=schedule)
     return CommPlan(key=key, kind="wsync", axis=axis, n_dev=n_dev,
                     backend=backend, use_pallas=use_pallas,
                     buckets=tuple(buckets), raw_leaf_ix=raw_ix,
-                    n_leaves=len(leaves), strategy=strategy)
+                    n_leaves=len(leaves), strategy=strategy,
+                    broadcast=schedule)
 
 
-def wsync_plan_key(tree, axis_name, policy, strategy: str, n_dev: int) -> tuple:
+def wsync_plan_key(tree, axis_name, policy, strategy: str, n_dev: int,
+                   broadcast: "BroadcastSchedule | None" = None) -> tuple:
+    # the schedule triple is part of the key: a fleet-size or fan-out
+    # change MUST miss and recompile — replaying a stale topology would
+    # mis-route the broadcast (route_for also fails loudly at runtime)
+    sched_key = (None if broadcast is None else
+                 (broadcast.kind, broadcast.fanout, broadcast.n_receivers))
     return ("wsync", tree_signature(tree), str(strategy),
             axis_tuple(axis_name), int(n_dev),
-            policy_fingerprint(policy, "weight"), probe_backend())
+            policy_fingerprint(policy, "weight"), probe_backend(),
+            sched_key)
 
 
 # ---------------------------------------------------------------------------
@@ -655,18 +704,27 @@ def cached_p2p_plan(x, axis_name, *, policy, n_dev: int,
 
 
 def cached_wsync_plan(tree, axis_name, *, policy, n_dev: int,
-                      strategy: str = "split_send", cache=None):
+                      strategy: str = "split_send", broadcast: str = None,
+                      fanout: int = 2, n_receivers: int = 0, cache=None):
     """Keyed-cache wrapper for :func:`compile_wsync_plan` — the sync
     engine's entry point (a stable weight-tree signature hits the cached
     schedule on every publish after the first; zero re-derived decisions
-    per broadcast)."""
+    per broadcast).  ``broadcast``/``fanout``/``n_receivers`` select the
+    fan-out topology: a stable fleet size hits, a changed one misses and
+    recompiles the schedule."""
     from repro.sched.cache import default_cache
 
     cache = default_cache() if cache is None else cache
-    key = wsync_plan_key(tree, axis_name, policy, strategy, n_dev)
+    schedule = None
+    if broadcast is not None:
+        schedule = compile_broadcast_schedule(
+            n_receivers, kind=broadcast, fanout=fanout)
+    key = wsync_plan_key(tree, axis_name, policy, strategy, n_dev,
+                         broadcast=schedule)
     return cache.get_or_compile(
         key, lambda: compile_wsync_plan(
             tree, axis_name, policy=policy, n_dev=n_dev, strategy=strategy,
+            broadcast=broadcast, fanout=fanout, n_receivers=n_receivers,
             key=key))
 
 

@@ -523,6 +523,52 @@ def sync_weights_with_plan(tree, axis_name, perm, *, policy=None, base=None,
     return execute_wsync(plan, tree, axis_name, perm, base=base)
 
 
+def wsync_hop_perms(schedule, ranks) -> tuple:
+    """Lower a :class:`~repro.sched.plan.BroadcastSchedule` to per-level
+    ppermute perm lists for the in-mesh wire.
+
+    ``ranks[0]`` is the trainer's device rank, ``ranks[1:]`` the receiver
+    ranks in slot order (the distributor's sorted-name order).  Level
+    ``h``'s perm forwards from the hop-``h-1`` holders to the hop-``h``
+    receivers, so replaying the levels in order delivers every rank
+    exactly once — star lowers to one wide level, a pipeline to a chain
+    of single-pair levels.  A rank list that disagrees with the schedule's
+    compiled fleet size fails loudly (the stale-schedule guard)."""
+    ranks = tuple(ranks)
+    if len(ranks) != schedule.n_receivers + 1:
+        raise ValueError(
+            f"stale broadcast schedule: compiled for "
+            f"{schedule.n_receivers} receivers, got {len(ranks) - 1} ranks")
+    return tuple(tuple((ranks[p], ranks[c]) for p, c in level)
+                 for level in schedule.levels())
+
+
+def execute_wsync_broadcast(plan: CommPlan, tree, axis_name, ranks, *,
+                            base=None):
+    """Run a schedule-carrying kind-"wsync" plan as its sequence of
+    in-mesh hop levels: level h re-sends what the hop-h-1 holders received
+    along that level's perm (``wsync_hop_perms``).
+
+    The in-mesh twin of the fleet's host broadcast — the SAME
+    ``BroadcastSchedule`` drives both.  The difference is the forwarding
+    medium: the host fleet forwards the encoded ``SyncUpdate`` wire
+    verbatim (zero re-encodes), while each in-mesh hop replays the full
+    ``wsync_dispatch`` (an SPMD program re-encodes at every level's
+    sources — XLA owns that wire).  Returns (tree_at_leaves, flag); the
+    flag ORs every level's overflow flag, so a nonzero means some hop's
+    delta overflowed and the caller must retry full."""
+    assert plan.kind == "wsync", plan.kind
+    if plan.broadcast is None:
+        raise ValueError("plan carries no BroadcastSchedule; use "
+                         "execute_wsync with an explicit perm")
+    current, flag = tree, jnp.int32(0)
+    for level in wsync_hop_perms(plan.broadcast, ranks):
+        current, f = execute_wsync(plan, current, axis_name, list(level),
+                                   base=base)
+        flag = jnp.maximum(flag, f)
+    return current, flag
+
+
 # ---------------------------------------------------------------------------
 # FSDP gather
 # ---------------------------------------------------------------------------

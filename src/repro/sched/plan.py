@@ -41,6 +41,129 @@ PATH_RAW_PSUM = "raw_psum"        # small: plain (f32-promoted) psum
 PATH_COMPRESSED = "compressed"
 PATH_RAW = "raw"
 
+# -- broadcast schedule kinds (kind "wsync" fan-out topologies) ---------------
+BROADCAST_STAR = "star"          # trainer -> every receiver directly
+BROADCAST_TREE = "tree"          # k-ary tree: interior receivers forward
+BROADCAST_PIPELINE = "pipeline"  # chain: every receiver forwards to one
+BROADCAST_KINDS = (BROADCAST_STAR, BROADCAST_TREE, BROADCAST_PIPELINE)
+
+
+@dataclasses.dataclass(frozen=True)
+class BroadcastSchedule:
+    """Who forwards the encoded weight-sync wire to whom (kind "wsync").
+
+    Slot 0 is the trainer (root); slots ``1..n_receivers`` are receiver
+    ranks, assigned deterministically by the distributor (sorted replica
+    names — ``route_for``).  All three kinds are one arithmetic family
+    over the *effective* fan-out ``fanout``: the children of slot ``s``
+    are slots ``fanout*s + 1 .. fanout*s + fanout`` (clipped to
+    ``n_receivers``), i.e. a k-ary heap rooted at the trainer.  ``star``
+    is ``fanout == n_receivers`` (every receiver a root child, depth 1),
+    ``pipeline`` is ``fanout == 1`` (a chain, depth n), ``tree`` anything
+    between.  ``compile.compile_broadcast_schedule`` normalizes the
+    requested fan-out into this form; the frozen record is what travels
+    in the ``CommPlan`` (like ``strategy`` does for p2p kinds).
+
+    The forwarding invariant the fleet builds on: every receiver in one
+    schedule holds the SAME base version, so the encoded ``SyncUpdate``
+    is byte-identical for all of them (the engine's per-(base, force)
+    memo) and interior slots forward the received wire VERBATIM —
+    CRC-verified at every hop, never decoded+re-encoded."""
+
+    kind: str
+    fanout: int  # effective children per node (already normalized)
+    n_receivers: int
+
+    def __post_init__(self):
+        if self.kind not in BROADCAST_KINDS:
+            raise ValueError(f"unknown broadcast kind {self.kind!r}; "
+                             f"expected one of {BROADCAST_KINDS}")
+        if self.n_receivers < 0:
+            raise ValueError(f"n_receivers must be >= 0, "
+                             f"got {self.n_receivers}")
+        if self.fanout < 1:
+            raise ValueError(f"fanout must be >= 1, got {self.fanout}")
+        if self.kind == BROADCAST_STAR and self.fanout < self.n_receivers:
+            raise ValueError(
+                f"star schedule needs fanout >= n_receivers, got "
+                f"{self.fanout} < {self.n_receivers}")
+        if self.kind == BROADCAST_PIPELINE and self.fanout != 1:
+            raise ValueError(
+                f"pipeline schedule is fanout 1, got {self.fanout}")
+
+    # -- topology (pure arithmetic; slot 0 = trainer) -------------------------
+
+    def parent_of(self, slot: int) -> int:
+        if not 1 <= slot <= self.n_receivers:
+            raise ValueError(f"slot {slot} outside 1..{self.n_receivers}")
+        return (slot - 1) // self.fanout
+
+    def children_of(self, slot: int) -> tuple:
+        if not 0 <= slot <= self.n_receivers:
+            raise ValueError(f"slot {slot} outside 0..{self.n_receivers}")
+        lo = self.fanout * slot + 1
+        return tuple(range(lo, min(lo + self.fanout,
+                                   self.n_receivers + 1)))
+
+    def hops_to(self, slot: int) -> int:
+        """Wire hops from the trainer to ``slot`` (root children = 1)."""
+        h = 0
+        while slot > 0:
+            slot = (slot - 1) // self.fanout
+            h += 1
+        return h
+
+    @property
+    def depth(self) -> int:
+        """Hops to the deepest receiver (star = 1, pipeline = n)."""
+        return self.hops_to(self.n_receivers) if self.n_receivers else 0
+
+    @property
+    def root_degree(self) -> int:
+        """Direct trainer sends per broadcast — the egress multiplier the
+        tree/pipeline kinds exist to shrink (star: n_receivers)."""
+        return len(self.children_of(0))
+
+    @property
+    def n_edges(self) -> int:
+        """Total wire sends per broadcast: every receiver is the dst of
+        exactly one edge, whatever the kind."""
+        return self.n_receivers
+
+    def edges(self) -> tuple:
+        """((parent_slot, child_slot), ...) in (level, slot) order."""
+        return tuple((self.parent_of(s), s)
+                     for s in range(1, self.n_receivers + 1))
+
+    def levels(self) -> tuple:
+        """Edges grouped by hop depth: level h (1-based) holds the edges
+        whose dst is h hops from the trainer — the in-mesh lowering order
+        (``sched/executor.wsync_hop_perms``)."""
+        by_depth: dict = {}
+        for p, c in self.edges():
+            by_depth.setdefault(self.hops_to(c), []).append((p, c))
+        return tuple(tuple(by_depth[h]) for h in sorted(by_depth))
+
+    def route_for(self, names) -> tuple:
+        """Lower the slot topology onto concrete receiver names: returns
+        the trainer's direct sends as ``((name, subroute), ...)`` where
+        ``subroute`` is the same shape for that receiver's subtree.
+
+        ``names`` must hold exactly ``n_receivers`` entries (slot ``i+1``
+        takes ``names[i]``) — a schedule compiled for a different fleet
+        size fails LOUDLY here instead of mis-routing."""
+        names = tuple(names)
+        if len(names) != self.n_receivers:
+            raise ValueError(
+                f"stale broadcast schedule: compiled for "
+                f"{self.n_receivers} receivers, routing {len(names)}")
+
+        def sub(slot):
+            return (names[slot - 1],
+                    tuple(sub(c) for c in self.children_of(slot)))
+
+        return tuple(sub(c) for c in self.children_of(0))
+
 
 @dataclasses.dataclass(frozen=True)
 class BucketPlan:
@@ -126,7 +249,10 @@ class CommPlan:
     leaves outside every bucket (unsupported dtypes): synced with a plain
     safe psum (kind "psum") or moved with a raw ppermute (kind "kv").
     ``strategy`` is the P2P pipeline variant of "p2p"/"kv" plans
-    ("split_send" | "encode_send" | "chunked"); empty for collectives."""
+    ("split_send" | "encode_send" | "chunked"); empty for collectives.
+    ``broadcast`` is the fan-out topology of "wsync" plans compiled for a
+    concrete fleet size (``BroadcastSchedule``); None for every other
+    kind and for receiver-count-agnostic wsync plans."""
 
     key: tuple  # the cache key this plan was compiled under (hashable)
     kind: str
@@ -138,6 +264,7 @@ class CommPlan:
     raw_leaf_ix: tuple = ()
     n_leaves: int = 0
     strategy: str = ""  # P2P pipeline variant (kinds "p2p"/"kv" only)
+    broadcast: "BroadcastSchedule | None" = None  # kind "wsync" only
 
     def _flat_buckets(self):
         for b in self.buckets:
@@ -199,6 +326,9 @@ class CommPlan:
             "raw_bytes": self.raw_bytes,
             "ratio": self.ratio,
             "delta_wire_bytes": self.delta_wire_bytes,
+            "broadcast": (None if self.broadcast is None else
+                          (self.broadcast.kind, self.broadcast.fanout,
+                           self.broadcast.n_receivers)),
         }
 
 

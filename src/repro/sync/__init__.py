@@ -23,10 +23,11 @@ injected ``runtime/faults.FaultPlan``.
 """
 from repro.sync.engine import (SyncUpdate, WeightSyncEngine, apply_update,
                                update_checksum, verify_update)
-from repro.sync.fleet import FleetConfig, Replica, SyncFleet
+from repro.sync.fleet import FleetConfig, Replica, RoutedUpdate, SyncFleet
 from repro.sync.store import VersionedStore
-from repro.sync.wire import sync_weights
+from repro.sync.wire import broadcast_weights, sync_weights
 
-__all__ = ["FleetConfig", "Replica", "SyncFleet", "SyncUpdate",
-           "VersionedStore", "WeightSyncEngine", "apply_update",
-           "sync_weights", "update_checksum", "verify_update"]
+__all__ = ["FleetConfig", "Replica", "RoutedUpdate", "SyncFleet",
+           "SyncUpdate", "VersionedStore", "WeightSyncEngine",
+           "apply_update", "broadcast_weights", "sync_weights",
+           "update_checksum", "verify_update"]

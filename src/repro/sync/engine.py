@@ -194,13 +194,24 @@ class WeightSyncEngine:
             acked = self.store.acked_version(r)
             gauge.set(latest - acked, replica=str(r))
 
-    def plan_for(self, params):
-        """The cached kind-"wsync" CommPlan of ``params``' signature."""
+    def plan_for(self, params, *, broadcast: Optional[str] = None,
+                 fanout: int = 2, n_receivers: int = 0):
+        """The cached kind-"wsync" CommPlan of ``params``' signature.
+
+        ``broadcast``/``fanout``/``n_receivers`` additionally compile the
+        fan-out topology into the plan (``CommPlan.broadcast``) — the
+        fleet's distributor asks for the schedule of each same-base
+        receiver group here, so a stable fleet size is a cache hit and a
+        changed one recompiles (the schedule triple is part of the key).
+        The default (no broadcast) is the receiver-count-agnostic plan
+        ``_encode_update`` uses: the encode schedule is identical across
+        topologies — forwarding must never change the bits."""
         from repro import sched
 
         return sched.cached_wsync_plan(
             params, self.axis_name, policy=self.policy, n_dev=1,
-            strategy=self.strategy, cache=self.plan_cache)
+            strategy=self.strategy, cache=self.plan_cache,
+            broadcast=broadcast, fanout=fanout, n_receivers=n_receivers)
 
     def update_for(self, replica, *, force: Optional[str] = None
                    ) -> SyncUpdate:

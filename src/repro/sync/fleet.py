@@ -24,6 +24,15 @@ and go, and the trainer itself restarts.
     convergence) instead of wedging the fleet.
   * **Elasticity** — ``kill``/``join`` mid-epoch: a dead replica's
     messages evaporate; a joiner has no ack and is served the full wire.
+  * **Broadcast schedules** — ``FleetConfig.broadcast`` routes each
+    distribute round over a compiled
+    :class:`~repro.sched.plan.BroadcastSchedule` (star / k-ary tree /
+    pipelined chain): same-base receivers share the byte-identical
+    encoded update (the engine's per-(base, force) memo), so interior
+    replicas FORWARD the received wire object verbatim after their own
+    CRC check — zero decode+re-encode per hop — and a dead interior
+    node's subtree re-parents to direct trainer full-sends until it
+    re-acks back into the tree.
   * **Trainer failover** — ``restart_trainer()`` restores the
     ``VersionedStore`` from its latest ``CheckpointManager`` snapshot
     (taken every ``ckpt_every_publishes`` publishes, so a crash can
@@ -48,8 +57,9 @@ import numpy as np
 
 from repro import obs
 from repro.runtime.faults import FaultPlan, FaultyWire
-from repro.sync.engine import (MODE_FULL, MODE_RAW, WeightSyncEngine,
-                               apply_update, verify_update)
+from repro.sched.plan import BROADCAST_KINDS, BROADCAST_STAR
+from repro.sync.engine import (MODE_FULL, MODE_RAW, SyncUpdate,
+                               WeightSyncEngine, apply_update, verify_update)
 from repro.sync.store import VersionedStore
 
 TRAINER = "trainer"  # the wire address acks/nacks travel to
@@ -58,7 +68,14 @@ TRAINER = "trainer"  # the wire address acks/nacks travel to
 @dataclasses.dataclass(frozen=True)
 class FleetConfig:
     """Protocol knobs.  The retry budget is per replica per incident
-    streak: ``failures`` resets on every accepted ack."""
+    streak: ``failures`` resets on every accepted ack.
+
+    ``broadcast``/``fanout`` select the fan-out topology of each
+    distribute round (``sched.compile_broadcast_schedule``): "star" is
+    the legacy trainer-sends-N-copies wire; "tree"/"pipeline" route each
+    same-base receiver group through a compiled
+    :class:`~repro.sched.plan.BroadcastSchedule` whose interior replicas
+    forward the encoded update verbatim."""
 
     max_retries: int = 8  # consecutive failures before quarantine
     backoff_base: int = 1  # rounds skipped after the 1st failure
@@ -67,6 +84,26 @@ class FleetConfig:
     history: int = 4  # VersionedStore retention
     ckpt_dir: Optional[str] = None  # lazily tmpdir'd when unset
     ckpt_every_publishes: int = 1  # store snapshot cadence
+    broadcast: str = BROADCAST_STAR  # fan-out topology kind
+    fanout: int = 2  # interior fan-out (tree kind)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutedUpdate:
+    """A scheduled delivery: the shared encoded :class:`SyncUpdate` wire
+    plus the receiver's subtree — ``route`` holds ``(child_name,
+    child_subroute)`` pairs the receiver must forward the SAME ``update``
+    object to after its own CRC check passes.  ``hop`` counts wire hops
+    from the trainer (root children = 1).
+
+    The envelope is pure routing: corruption (``runtime/faults.
+    corrupt_payload``) targets the inner update's payload, exactly like a
+    direct send, so every hop's CRC verification covers the forwarded
+    bits."""
+
+    update: SyncUpdate
+    route: tuple  # ((child_name, subroute), ...)
+    hop: int = 1
 
 
 class Replica:
@@ -147,12 +184,19 @@ class SyncFleet:
                  fault_plan: Optional[FaultPlan] = None):
         self.engine = engine
         self.cfg = cfg or FleetConfig()
+        if self.cfg.broadcast not in BROADCAST_KINDS:
+            raise ValueError(
+                f"unknown broadcast kind {self.cfg.broadcast!r}; "
+                f"expected one of {BROADCAST_KINDS}")
         # one plan object drives BOTH seams: the wire's message faults
         # and the fleet's lifecycle events, off one seed
         self.fault_plan = fault_plan
         self.wire = wire if wire is not None else FaultyWire(fault_plan)
         self.replicas: dict = {}
         self._links: dict = {}
+        # subtree members stranded by a dead interior forwarder: served a
+        # direct full send from the trainer until their ack rejoins them
+        self._orphans: set = set()
         self._round = 0
         self._publishes = 0
         self._ckpt = None
@@ -161,7 +205,10 @@ class SyncFleet:
                       "escalations": 0, "quarantines": 0,
                       "corrupt_seen": 0, "corrupt_lost": 0,
                       "checksum_rejects": 0, "fence_rejects": 0,
-                      "max_link_failures": 0, "trainer_restarts": 0}
+                      "max_link_failures": 0, "trainer_restarts": 0,
+                      "forwards": 0, "forward_bytes": 0,
+                      "trainer_egress_bytes": 0, "reparents": 0,
+                      "max_hop_depth": 0}
         for name in replica_names:
             self._add_replica(name)
 
@@ -292,38 +339,150 @@ class SyncFleet:
             raise ValueError(f"unknown lifecycle fault {ev.kind!r}")
 
     def _send_updates(self) -> set:
+        """One distribute pass: owed replicas partition into same-
+        ``(base, force)`` groups — the engine's memo key, so every member
+        of a group receives the byte-identical encoded update — and each
+        group rides its compiled :class:`BroadcastSchedule`.  Star (or a
+        singleton group) is a direct send per member; tree/pipeline wire
+        only the schedule's root children, with the rest of the group
+        nested in each envelope's ``route`` for interior forwarding.
+        Orphans (subtree members stranded by a dead forwarder) bypass the
+        schedule: a direct full send from the trainer until they re-ack
+        and rejoin the tree."""
         store = self.engine.store
         sent = set()
         if store.version == 0:
             return sent  # nothing published yet
+        owed = []
         for name in self._targets():
             link = self._links[name]
             if self._round < link.next_try:
                 continue  # backing off — the round does NOT wait
             if (store.acked_version(name) == store.version
                     and link.escalation == 0):
+                self._orphans.discard(name)  # current: back in the tree
                 continue  # trainer-side view: already current
-            force = (None, MODE_FULL, MODE_RAW)[link.escalation]
-            update = self.engine.update_for(name, force=force)
-            self.wire.send(name, update)
-            sent.add(name)
+            owed.append(name)
+        groups: dict = {}
+        for name in owed:
+            if name in self._orphans:
+                update = self.engine.update_for(name, force=MODE_FULL)
+                self._trainer_send(name, update)
+                sent.add(name)
+                continue
+            force = (None, MODE_FULL, MODE_RAW)[self._links[name].escalation]
+            base = None if force is not None else store.base_for(name)
+            groups.setdefault((base, force), []).append(name)
+        for base, force in sorted(
+                groups, key=lambda k: (k[0] is None, k[0] or 0, k[1] or "")):
+            names = sorted(groups[(base, force)])
+            update = self.engine.update_for(names[0], force=force)
+            schedule = self._schedule_for(len(names))
+            if schedule is None:
+                for name in names:
+                    self._trainer_send(name, update)
+            else:
+                for child, subroute in schedule.route_for(names):
+                    self._trainer_send(child, update, route=subroute)
+            sent.update(names)
         return sent
 
+    def _schedule_for(self, m: int):
+        """The compiled fan-out topology for an ``m``-receiver group, or
+        None for the direct (star) wire.  Compiled through the plan cache
+        (``engine.plan_for``): a stable group size hits, a changed one
+        recompiles — and a plan whose recorded schedule disagrees with
+        the group fails loudly instead of mis-routing."""
+        if self.cfg.broadcast == BROADCAST_STAR or m <= 1:
+            return None
+        params, _ = self.engine.store.latest()
+        plan = self.engine.plan_for(params, broadcast=self.cfg.broadcast,
+                                    fanout=self.cfg.fanout, n_receivers=m)
+        schedule = plan.broadcast
+        if schedule is None or schedule.n_receivers != m:
+            raise RuntimeError(
+                f"stale wsync broadcast schedule: plan recorded "
+                f"{getattr(schedule, 'n_receivers', None)} receivers, "
+                f"the fleet is routing {m}")
+        return schedule
+
+    def _trainer_send(self, name: str, update, route=()) -> None:
+        """One trainer-egress wire: bare update for direct/star sends,
+        a :class:`RoutedUpdate` hop-1 envelope when ``name`` must forward
+        a subtree."""
+        payload = (update if not route
+                   else RoutedUpdate(update, tuple(route), hop=1))
+        self.wire.send(name, payload)
+        w = int(update.wire_bytes)
+        self.stats["trainer_egress_bytes"] += w
+        obs.metric("fleet_trainer_egress_bytes_total").inc(w)
+
     def _deliver_to_replicas(self) -> None:
-        for name, rep in self.replicas.items():
-            for payload, corrupted in self.wire.drain(name,
-                                                      with_flags=True):
-                if not rep.alive:
-                    # messages to a dead replica evaporate; corrupted
-                    # ones are accounted so the chaos gate's ledger
-                    # (injected == detected + lost) stays exact
+        # Scheduled delivery is multi-hop: a verified interior wire
+        # re-enters the queues for its children, so drain until the
+        # in-round traffic is exhausted (delayed messages stay held by
+        # the wire).  The loop is finite — every forward consumes one
+        # node of a finite route.
+        progress = True
+        while progress:
+            progress = False
+            for name, rep in self.replicas.items():
+                for payload, corrupted in self.wire.drain(name,
+                                                          with_flags=True):
+                    progress = True
+                    update, route, hop = (
+                        (payload.update, payload.route, payload.hop)
+                        if isinstance(payload, RoutedUpdate)
+                        else (payload, (), 1))
+                    if not rep.alive:
+                        # messages to a dead replica evaporate; corrupted
+                        # ones are accounted so the chaos gate's ledger
+                        # (injected == detected + lost) stays exact, and
+                        # a dead INTERIOR node orphans its whole subtree
+                        # (they fall back to direct trainer sends)
+                        if corrupted:
+                            self.stats["corrupt_lost"] += 1
+                        if route:
+                            self._orphan_subtree(name, route)
+                        continue
                     if corrupted:
-                        self.stats["corrupt_lost"] += 1
-                    continue
-                if corrupted:
-                    self.stats["corrupt_seen"] += 1
-                resp = rep.receive(payload)
-                self.wire.send(TRAINER, resp)
+                        self.stats["corrupt_seen"] += 1
+                    if hop > self.stats["max_hop_depth"]:
+                        self.stats["max_hop_depth"] = hop
+                        obs.metric("fleet_hop_depth").set(hop)
+                    resp = rep.receive(update)
+                    self.wire.send(TRAINER, resp)
+                    if route and not (resp["type"] == "nack"
+                                      and resp["reason"] == "checksum"):
+                        # forward the SAME wire object verbatim — zero
+                        # decode+re-encode at interior hops.  A checksum
+                        # reject means THIS hop's copy is damaged:
+                        # forwarding would spread it, so the subtree
+                        # retries through the timeout machinery instead.
+                        self._forward(name, update, route, hop)
+
+    def _forward(self, name: str, update, route, hop: int) -> None:
+        w = int(update.wire_bytes)
+        for child, subroute in route:
+            self.wire.send(child,
+                           RoutedUpdate(update, tuple(subroute), hop + 1))
+            self.stats["forwards"] += 1
+            self.stats["forward_bytes"] += w
+            obs.metric("fleet_forwards_total").inc()
+            obs.metric("fleet_forwarded_bytes_total").inc(w)
+            obs.instant("fleet:forward", src=name, dst=child, hop=hop + 1)
+
+    def _orphan_subtree(self, at: str, route) -> None:
+        """Re-parent every receiver below a dead forwarder: direct full
+        sends from the trainer next round, back into the tree on re-ack."""
+        for child, subroute in route:
+            if child not in self._orphans:
+                self._orphans.add(child)
+                self.stats["reparents"] += 1
+                obs.metric("fleet_reparents_total").inc()
+                self.trace.append(
+                    (self._round, f"reparent {child} (via dead {at})"))
+            self._orphan_subtree(at, subroute)
 
     def _drain_trainer(self) -> set:
         responded = set()
@@ -337,6 +496,7 @@ class SyncFleet:
             if resp["type"] == "ack":
                 if self.engine.ack(name, resp["version"], resp["epoch"]):
                     link.reset()  # the path works: clear the streak
+                    self._orphans.discard(name)  # rejoin the tree
                 # a fenced (old-epoch) ack is ignored; the full send
                 # already in flight will produce a current one
             else:
@@ -408,7 +568,13 @@ class SyncFleet:
         return rounds
 
     def integrity_ledger(self) -> dict:
-        """The corruption accounting the chaos gate asserts over:
+        """The corruption accounting the chaos gate asserts over.  The
+        ledger is per DELIVERY, so it holds unchanged under multi-hop
+        schedules: a corruption injected on a forwarded hop is ``seen``
+        and ``detected`` at the next hop's CRC check (interior or leaf),
+        and one maturing at a dead interior node is ``lost`` — the
+        balance ``injected == seen + lost`` covers every edge of the
+        tree, not just trainer-direct wires.
 
         * ``injected`` — corruptions the wire actually applied;
         * ``seen`` — corrupted deliveries that reached a LIVE replica;
@@ -432,7 +598,10 @@ class SyncFleet:
     def verify_bitexact(self) -> bool:
         """The chaos gate's ground truth: every owed replica's params
         equal the latest published tree in the uint domain (tobytes
-        compare — NaN payloads included)."""
+        compare — NaN payloads included).  Schedule-independent on
+        purpose: a replica served through three forwarded hops must hold
+        the same bits as one the trainer wired directly — the forwarding
+        invariant, asserted from the replicas' side."""
         import jax
 
         params, _ = self.engine.store.latest()

@@ -82,3 +82,27 @@ def sync_weights(tree, axis_name, perm, *, policy: CompressionPolicy,
         if leaves[i].ndim == 0:
             out[i] = out[i][0]
     return jax.tree_util.tree_unflatten(treedef, out), flag
+
+
+def broadcast_weights(tree, axis_name, schedule, ranks, *,
+                      policy: CompressionPolicy, base=None,
+                      strategy: str = "split_send"):
+    """Planless in-mesh replay of a :class:`~repro.sched.plan.
+    BroadcastSchedule`: one :func:`sync_weights` per hop level, each
+    level's perm forwarding from the previous level's receivers
+    (``sched.executor.wsync_hop_perms`` lowers the topology; this is its
+    policy-re-deriving reference twin, bit-identical to
+    ``sched.executor.execute_wsync_broadcast`` by construction).
+
+    The host fleet (``sync/fleet.SyncFleet``) is where the schedule's
+    zero-re-encode forwarding lives; in-mesh every level re-runs the
+    dispatch at its sources.  Returns (tree_at_leaves, ORed flag)."""
+    from repro.sched.executor import wsync_hop_perms
+
+    current, flag = tree, jnp.int32(0)
+    for level in wsync_hop_perms(schedule, ranks):
+        current, f = sync_weights(current, axis_name, list(level),
+                                  policy=policy, base=base,
+                                  strategy=strategy)
+        flag = jnp.maximum(flag, f)
+    return current, flag

@@ -22,6 +22,15 @@ try:  # real hypothesis when available — full property-based run
     from hypothesis import strategies
 
     HAVE_HYPOTHESIS = True
+
+    # CI determinism: the same examples on every run (derandomize seeds
+    # the search from the test body), no wall-clock deadline (XLA's
+    # first-trace compile pauses would flake any deadline), bounded
+    # example count so tier-1 stays fast.  Registered + loaded here so
+    # every suite importing _compat gets the profile.
+    settings.register_profile(
+        "repro", settings(max_examples=25, deadline=None, derandomize=True))
+    settings.load_profile("repro")
 except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False
 

@@ -1,0 +1,663 @@
+"""Broadcast schedules for weight sync: differential + property layer.
+
+The tentpole claim under test: routing a publish over a k-ary tree or a
+pipelined chain changes WHO forwards the encoded wire, and nothing else —
+every replica ends bit-identical to the star fleet, to the planless
+direct apply, and to the published tree itself (uint-domain compare, NaN
+payloads included), with exactly ONE encode per publish and egress bytes
+that sum exactly across hops.
+
+Layers covered:
+
+  * ``sched/plan.BroadcastSchedule`` — the pure slot arithmetic (every
+    receiver exactly one parent, levels partition edges, depth bounds,
+    ``route_for`` name lowering + its stale-schedule loud failure);
+  * ``sched/compile`` — schedule normalization, the schedule triple in
+    the plan key, encode schedule invariance across topologies;
+  * ``sched/cache`` — schedule-carrying plans round-trip persistence,
+    zero recompiles at a stable fleet size, recompile on change;
+  * ``sync/fleet.SyncFleet`` — the host broadcast: differential
+    tree/pipeline vs star vs planless, one-encode-per-publish,
+    exact per-hop egress accounting, hop-depth telemetry;
+  * ``sched/executor.wsync_hop_perms`` / ``execute_wsync_broadcast`` /
+    ``sync/wire.broadcast_weights`` — the in-mesh lowering twins.
+
+Property sweeps ride the deterministic ``_compat`` hypothesis shim.
+"""
+import pickle
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from _compat import given, settings, strategies as st
+from repro.core import codec
+from repro.core.policy import CompressionPolicy
+from repro.sched import (BROADCAST_KINDS, BroadcastSchedule, PlanCache,
+                         cached_wsync_plan, compile_broadcast_schedule,
+                         compile_wsync_plan, execute_wsync_broadcast,
+                         load_plans, save_plans, wsync_hop_perms)
+from repro.sched.cache import _PLANS_VERSION
+from repro.sync import (FleetConfig, SyncFleet, WeightSyncEngine,
+                        apply_update, broadcast_weights, sync_weights)
+
+POL = CompressionPolicy(min_bytes=0)
+KINDS = ("star", "tree", "pipeline")
+
+
+# ---------------------------------------------------------------------------
+# helpers (idioms shared with test_sync.py / test_faults.py)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1,), ("data",))
+
+
+def _shmap(fn, mesh, n_in=1, n_out=2):
+    return jax.shard_map(fn, mesh=mesh, in_specs=(P(),) * n_in,
+                         out_specs=(P(),) * n_out, axis_names={"data"},
+                         check_vma=False)
+
+
+def bits(a):
+    lay = codec.LAYOUTS.get(jnp.dtype(a.dtype).name)
+    if lay is not None:
+        return jax.lax.bitcast_convert_type(a, lay.uint_dtype)
+    return a
+
+
+def tree_bits_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        bool(jnp.all(bits(x) == bits(y))) for x, y in zip(la, lb))
+
+
+def random_bits(dtype_name, n, seed=0):
+    """Arbitrary bit patterns: normals, subnormals, zeros, Inf, NaN."""
+    lay = codec.LAYOUTS[dtype_name]
+    rng = np.random.default_rng(seed)
+    npdt = {8: np.uint8, 16: np.uint16, 32: np.uint32}[lay.total_bits]
+    raw = rng.integers(0, 2 ** lay.total_bits, n, dtype=np.uint64).astype(npdt)
+    return jax.lax.bitcast_convert_type(jnp.asarray(raw), lay.dtype)
+
+
+def fleet_params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(0, 0.02, (768,)), jnp.bfloat16),
+        "b": jnp.asarray(rng.normal(0, 1, (192,)), jnp.float32),
+        "step": jnp.asarray(int(seed), jnp.int32),  # raw-path leaf
+    }
+
+
+def perturb(params, seed=1):
+    rng = np.random.default_rng(seed)
+
+    def f(l):
+        lay = codec.LAYOUTS.get(jnp.dtype(l.dtype).name)
+        if lay is None:
+            return l
+        u = lay.uint_dtype
+        mask = rng.integers(0, 8, l.shape).astype(np.uint64)
+        mask[rng.random(l.shape) > 0.3] = 0
+        return jax.lax.bitcast_convert_type(
+            jax.lax.bitcast_convert_type(l, u) ^ jnp.asarray(mask, u),
+            l.dtype)
+
+    return jax.tree.map(f, params)
+
+
+def make_fleet(names, *, broadcast="star", fanout=2, cache=None):
+    """A fault-free fleet with a private plan cache and checkpoint IO
+    disabled (the huge cadence never fires), so @given sweeps stay
+    hermetic and filesystem-free."""
+    eng = WeightSyncEngine(policy=POL,
+                           plan_cache=cache if cache is not None
+                           else PlanCache())
+    cfg = FleetConfig(broadcast=broadcast, fanout=fanout,
+                      ckpt_every_publishes=10 ** 9)
+    return SyncFleet(eng, names, cfg=cfg)
+
+
+def count_encodes(fleet, captured):
+    """Shadow the engine's encode with a counting wrapper; encoded
+    updates append to ``captured`` (white-box, like the fault tests)."""
+    orig = fleet.engine._encode_update
+
+    def counting(*a, **k):
+        captured.append(orig(*a, **k))
+        return captured[-1]
+
+    fleet.engine._encode_update = counting
+
+
+def names_of(n):
+    return tuple(f"r{i:02d}" for i in range(n))
+
+
+def flat_route(route):
+    out = []
+    for name, sub in route:
+        out.append(name)
+        out.extend(flat_route(sub))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# BroadcastSchedule: pure slot arithmetic
+# ---------------------------------------------------------------------------
+
+def test_broadcast_kinds_registry():
+    assert BROADCAST_KINDS == KINDS
+    for kind in BROADCAST_KINDS:
+        s = compile_broadcast_schedule(5, kind=kind, fanout=2)
+        assert s.kind == kind and s.n_receivers == 5
+
+
+def test_star_topology():
+    s = compile_broadcast_schedule(8, kind="star")
+    assert s.fanout == 8 and s.depth == 1 and s.root_degree == 8
+    assert s.edges() == tuple((0, c) for c in range(1, 9))
+    assert len(s.levels()) == 1
+
+
+def test_pipeline_topology():
+    s = compile_broadcast_schedule(5, kind="pipeline", fanout=7)
+    assert s.fanout == 1  # normalized to a chain
+    assert s.depth == 5 and s.root_degree == 1
+    assert all(s.parent_of(i) == i - 1 for i in range(1, 6))
+    assert all(len(level) == 1 for level in s.levels())
+
+
+def test_tree_topology_small():
+    s = compile_broadcast_schedule(7, kind="tree", fanout=2)
+    assert s.children_of(0) == (1, 2)
+    assert s.children_of(1) == (3, 4)
+    assert s.children_of(3) == (7,)
+    assert s.depth == 3 and s.root_degree == 2 and s.n_edges == 7
+
+
+@given(st.integers(1, 64), st.integers(1, 8), st.integers(0, 2))
+@settings(max_examples=25, deadline=None)
+def test_every_receiver_has_exactly_one_parent(n, fanout, kind_ix):
+    s = compile_broadcast_schedule(n, kind=KINDS[kind_ix], fanout=fanout)
+    dsts = [c for _, c in s.edges()]
+    assert sorted(dsts) == list(range(1, n + 1))  # each slot once
+    for p, c in s.edges():
+        assert p == s.parent_of(c) and p < c
+        assert c in s.children_of(p)
+
+
+@given(st.integers(0, 64), st.integers(1, 8), st.integers(0, 2))
+@settings(max_examples=25, deadline=None)
+def test_children_partition_receiver_slots(n, fanout, kind_ix):
+    s = compile_broadcast_schedule(n, kind=KINDS[kind_ix], fanout=fanout)
+    seen = []
+    for slot in range(n + 1):
+        seen.extend(s.children_of(slot))
+    assert sorted(seen) == list(range(1, n + 1))
+    # levels() partitions edges() by hop depth
+    level_edges = [e for level in s.levels() for e in level]
+    assert sorted(level_edges) == sorted(s.edges())
+
+
+@given(st.integers(1, 64), st.integers(1, 8), st.integers(0, 2))
+@settings(max_examples=25, deadline=None)
+def test_hop_depth_bounds(n, fanout, kind_ix):
+    kind = KINDS[kind_ix]
+    s = compile_broadcast_schedule(n, kind=kind, fanout=fanout)
+    for p, c in s.edges():
+        hp = 0 if p == 0 else s.hops_to(p)
+        assert s.hops_to(c) == hp + 1  # one wire per edge
+    assert s.depth == max(s.hops_to(c) for c in range(1, n + 1))
+    if kind == "star":
+        assert s.depth == 1
+    elif kind == "pipeline":
+        assert s.depth == n
+    elif s.fanout > 1 and s.depth > 1:
+        # a k-ary heap is depth-minimal: one level fewer cannot hold n
+        capacity = sum(s.fanout ** h for h in range(1, s.depth))
+        assert capacity < n
+
+
+def test_schedule_validation_errors():
+    with pytest.raises(ValueError):
+        BroadcastSchedule(kind="ring", fanout=2, n_receivers=4)
+    with pytest.raises(ValueError):
+        BroadcastSchedule(kind="tree", fanout=0, n_receivers=4)
+    with pytest.raises(ValueError):
+        BroadcastSchedule(kind="star", fanout=2, n_receivers=4)
+    with pytest.raises(ValueError):
+        BroadcastSchedule(kind="pipeline", fanout=2, n_receivers=4)
+    s = compile_broadcast_schedule(4, kind="tree", fanout=2)
+    with pytest.raises(ValueError):
+        s.parent_of(0)
+    with pytest.raises(ValueError):
+        s.children_of(5)
+    with pytest.raises(ValueError):
+        compile_broadcast_schedule(3, kind="mesh")
+
+
+def test_compile_normalizes_fanout():
+    assert compile_broadcast_schedule(8, kind="star", fanout=2).fanout == 8
+    assert compile_broadcast_schedule(8, kind="pipeline", fanout=8).fanout == 1
+    # a 3-replica fleet at fanout 8 IS a star-shaped tree
+    t = compile_broadcast_schedule(3, kind="tree", fanout=8)
+    assert t.fanout == 3 and t.depth == 1
+    empty = compile_broadcast_schedule(0, kind="tree", fanout=4)
+    assert empty.n_edges == 0 and empty.depth == 0
+    assert empty.route_for(()) == ()
+
+
+@given(st.integers(1, 64), st.integers(1, 8), st.integers(0, 2))
+@settings(max_examples=25, deadline=None)
+def test_route_for_lowers_slots_onto_names(n, fanout, kind_ix):
+    s = compile_broadcast_schedule(n, kind=KINDS[kind_ix], fanout=fanout)
+    names = names_of(n)
+    route = s.route_for(names)
+    assert sorted(flat_route(route)) == sorted(names)  # each exactly once
+    assert tuple(name for name, _ in route) == tuple(
+        names[c - 1] for c in s.children_of(0))
+
+    def check(name, sub, slot):
+        assert name == names[slot - 1]
+        assert len(sub) == len(s.children_of(slot))
+        for (cn, csub), cslot in zip(sub, s.children_of(slot)):
+            check(cn, csub, cslot)
+
+    for (name, sub), slot in zip(route, s.children_of(0)):
+        check(name, sub, slot)
+
+
+def test_route_for_stale_schedule_raises():
+    s = compile_broadcast_schedule(4, kind="tree", fanout=2)
+    with pytest.raises(ValueError, match="stale broadcast schedule"):
+        s.route_for(names_of(3))
+    with pytest.raises(ValueError, match="stale broadcast schedule"):
+        s.route_for(names_of(5))
+
+
+# ---------------------------------------------------------------------------
+# compile + plan key + cache persistence
+# ---------------------------------------------------------------------------
+
+def test_wsync_plan_records_schedule():
+    p = compile_wsync_plan(fleet_params(), "sync", policy=POL, n_dev=1,
+                           broadcast="tree", fanout=2, n_receivers=8)
+    assert p.broadcast == BroadcastSchedule("tree", 2, 8)
+    assert p.summary()["broadcast"] == ("tree", 2, 8)
+
+
+def test_default_wsync_plan_is_schedule_free():
+    p = compile_wsync_plan(fleet_params(), "sync", policy=POL, n_dev=1)
+    assert p.broadcast is None
+    assert p.summary()["broadcast"] is None
+
+
+def test_plan_key_carries_schedule_triple():
+    params = fleet_params()
+    keys = {
+        compile_wsync_plan(params, "sync", policy=POL, n_dev=1,
+                           broadcast=kind, fanout=f, n_receivers=n).key
+        for kind, f, n in [("tree", 2, 8), ("tree", 3, 8), ("tree", 2, 9),
+                           ("pipeline", 2, 8), ("star", 2, 8)]
+    }
+    assert len(keys) == 5  # every triple a distinct compile
+    plain = compile_wsync_plan(params, "sync", policy=POL, n_dev=1)
+    assert plain.key not in keys
+
+
+def test_encode_schedule_identical_across_topologies():
+    # The forwarding invariant's precondition: the bytes on the wire are
+    # decided by the bucket schedule alone, never by the topology.
+    params = fleet_params()
+    plain = compile_wsync_plan(params, "sync", policy=POL, n_dev=1)
+    for kind in KINDS:
+        routed = compile_wsync_plan(params, "sync", policy=POL, n_dev=1,
+                                    broadcast=kind, n_receivers=6)
+        assert routed.buckets == plain.buckets
+        assert routed.raw_leaf_ix == plain.raw_leaf_ix
+        assert routed.wire_bytes == plain.wire_bytes
+        assert routed.delta_wire_bytes == plain.delta_wire_bytes
+
+
+def test_cached_plan_hits_on_stable_fleet_size():
+    cache = PlanCache()
+    params = fleet_params()
+    kw = dict(policy=POL, n_dev=1, broadcast="tree", fanout=2, cache=cache)
+    p1 = cached_wsync_plan(params, "sync", n_receivers=8, **kw)
+    p2 = cached_wsync_plan(params, "sync", n_receivers=8, **kw)
+    assert p1 is p2
+    info = cache.cache_info()
+    assert info["misses"] == 1 and info["hits"] == 1
+    p3 = cached_wsync_plan(params, "sync", n_receivers=9, **kw)
+    assert p3 is not p1 and cache.cache_info()["misses"] == 2
+
+
+def test_schedule_plan_roundtrips_persistence(tmp_path):
+    src, dst = PlanCache(), PlanCache()
+    params = fleet_params()
+    plan = cached_wsync_plan(params, "sync", policy=POL, n_dev=1,
+                             broadcast="pipeline", n_receivers=5, cache=src)
+    path = str(tmp_path / "plans.pkl")
+    assert save_plans(path, src) == 1
+    assert load_plans(path, dst) == 1
+    restored = dst.get_or_compile(
+        plan.key, lambda: pytest.fail("roundtrip must not recompile"))
+    assert restored.broadcast == BroadcastSchedule("pipeline", 1, 5)
+    assert restored == plan
+
+
+def test_load_plans_rejects_pre_schedule_version(tmp_path):
+    # files pickled before CommPlan grew ``broadcast`` would restore
+    # instances missing the attribute — reject them loudly
+    path = str(tmp_path / "old.pkl")
+    with open(path, "wb") as f:
+        pickle.dump({"version": _PLANS_VERSION - 1, "plans": ()}, f)
+    with pytest.raises(ValueError, match="version"):
+        load_plans(path, PlanCache())
+
+
+def test_fleet_zero_recompiles_across_publishes():
+    cache = PlanCache()
+    f = make_fleet(names_of(6), broadcast="tree", fanout=2, cache=cache)
+    params = fleet_params()
+    for i in range(3):
+        f.publish(params if i == 0 else perturb(params, seed=i))
+        f.settle()
+    # exactly two compiles ever: the schedule-free encode plan + the
+    # 6-receiver tree; every later publish is a pure cache hit
+    info = cache.cache_info()
+    assert info["misses"] == 2 and info["size"] == 2
+    assert info["hits"] >= 3
+    assert f.verify_bitexact()
+
+
+def test_fleet_size_change_recompiles_schedule():
+    cache = PlanCache()
+    f = make_fleet(names_of(4), broadcast="tree", fanout=2, cache=cache)
+    f.publish(fleet_params())
+    f.settle()
+    assert cache.cache_info()["misses"] == 2
+    f.join("r99")  # no base yet: its first wave rides a singleton group
+    f.publish(perturb(fleet_params()))
+    f.settle()
+    assert cache.cache_info()["misses"] == 2
+    f.publish(perturb(fleet_params(), seed=2))  # now one 5-receiver group
+    f.settle()
+    assert cache.cache_info()["misses"] == 3
+    assert f.verify_bitexact()
+
+
+# ---------------------------------------------------------------------------
+# SyncFleet differential: tree/pipeline == star == planless, bit-exact
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 16), st.integers(1, 4), st.integers(0, 10 ** 6))
+@settings(max_examples=6, deadline=None)
+def test_tree_matches_star_and_published_bits(n, fanout, seed):
+    names = names_of(n)
+    star = make_fleet(names, broadcast="star")
+    tree = make_fleet(names, broadcast="tree", fanout=fanout)
+    v1, v2 = fleet_params(seed), perturb(fleet_params(seed), seed + 1)
+    for params in (v1, v2):  # full wave, then the delta wave
+        for f in (star, tree):
+            f.publish(params)
+            f.settle()
+    assert star.verify_bitexact() and tree.verify_bitexact()
+    for name in names:  # replica-pairwise, uint domain
+        assert tree_bits_equal(star.replicas[name].params,
+                               tree.replicas[name].params)
+    assert tree.integrity_ledger()["silent"] == 0
+
+
+@given(st.integers(1, 10), st.integers(0, 10 ** 6))
+@settings(max_examples=5, deadline=None)
+def test_pipeline_matches_star_and_published_bits(n, seed):
+    names = names_of(n)
+    star = make_fleet(names, broadcast="star")
+    pipe = make_fleet(names, broadcast="pipeline")
+    v1, v2 = fleet_params(seed), perturb(fleet_params(seed), seed + 7)
+    for params in (v1, v2):
+        for f in (star, pipe):
+            f.publish(params)
+            assert f.settle() == 1  # whole chain delivers in ONE round
+    assert star.verify_bitexact() and pipe.verify_bitexact()
+    for name in names:
+        assert tree_bits_equal(star.replicas[name].params,
+                               pipe.replicas[name].params)
+
+
+@pytest.mark.parametrize("dtype_name", ["float32", "bfloat16", "float16"])
+@pytest.mark.parametrize("kind", ["tree", "pipeline"])
+def test_arbitrary_bit_payloads_survive_forwarding(dtype_name, kind):
+    # NaN payloads, infinities and subnormals through multi-hop routes,
+    # checked against the planless reference: direct apply_update of the
+    # trainer's own encoded wire
+    params = {"x": random_bits(dtype_name, 257, seed=3),
+              "step": jnp.asarray(1, jnp.int32)}
+    f = make_fleet(names_of(5), broadcast=kind, fanout=2)
+    f.publish(params)
+    f.settle()
+    assert f.verify_bitexact()
+    planless = apply_update(f.engine.update_for("fresh"))
+    for name in names_of(5):
+        assert tree_bits_equal(f.replicas[name].params, planless)
+    v2 = {"x": random_bits(dtype_name, 257, seed=4),
+          "step": jnp.asarray(2, jnp.int32)}
+    f.publish(v2)
+    f.settle()
+    assert f.verify_bitexact() and f.integrity_ledger()["silent"] == 0
+
+
+@pytest.mark.parametrize("kind,fanout,n", [("star", 2, 6), ("tree", 2, 7),
+                                           ("tree", 3, 13),
+                                           ("pipeline", 1, 5)])
+def test_one_encode_per_publish(kind, fanout, n):
+    f = make_fleet(names_of(n), broadcast=kind, fanout=fanout)
+    captured = []
+    count_encodes(f, captured)
+    schedule = compile_broadcast_schedule(n, kind=kind, fanout=fanout)
+    params = fleet_params()
+    for i in range(3):
+        f.publish(params if i == 0 else perturb(params, seed=i))
+        f.settle()
+        # one encode TOTAL per publish, however many receivers/hops; the
+        # interior hops forwarded the wire without ever re-encoding
+        assert len(captured) == i + 1
+        assert len(f.engine._updates) == 1  # the per-(base, force) memo
+        expect_fwd = (i + 1) * (n - schedule.root_degree)
+        assert f.stats["forwards"] == expect_fwd
+    assert f.verify_bitexact()
+
+
+@given(st.integers(2, 24), st.integers(1, 8), st.integers(0, 2))
+@settings(max_examples=6, deadline=None)
+def test_egress_bytes_sum_exactly_across_hops(n, fanout, kind_ix):
+    kind = KINDS[kind_ix]
+    f = make_fleet(names_of(n), broadcast=kind, fanout=fanout)
+    captured = []
+    count_encodes(f, captured)
+    schedule = compile_broadcast_schedule(n, kind=kind, fanout=fanout)
+    f.publish(fleet_params())
+    f.settle()
+    before = dict(f.stats)
+    f.publish(perturb(fleet_params()))
+    f.settle()
+    w = captured[-1].wire_bytes  # the delta wave's shared wire
+    egress = f.stats["trainer_egress_bytes"] - before["trainer_egress_bytes"]
+    fwd_bytes = f.stats["forward_bytes"] - before["forward_bytes"]
+    fwd = f.stats["forwards"] - before["forwards"]
+    # trainer pays root_degree copies, interiors the rest; the sum is
+    # exactly one wire per receiver — nothing double-sent, nothing free
+    assert egress == schedule.root_degree * w
+    assert fwd == n - schedule.root_degree
+    assert fwd_bytes == fwd * w
+    assert egress + fwd_bytes == n * w
+    assert f.verify_bitexact()
+
+
+def test_star_fleet_sends_every_copy_itself():
+    n = 6
+    f = make_fleet(names_of(n), broadcast="star")
+    captured = []
+    count_encodes(f, captured)
+    f.publish(fleet_params())
+    f.settle()
+    assert f.stats["forwards"] == 0 and f.stats["reparents"] == 0
+    assert f.stats["max_hop_depth"] == 1
+    assert f.stats["trainer_egress_bytes"] == n * captured[-1].wire_bytes
+
+
+def test_hop_depth_tracks_schedule():
+    for kind, fanout, n, depth in [("tree", 2, 7, 3), ("pipeline", 1, 4, 4),
+                                   ("tree", 3, 3, 1)]:
+        f = make_fleet(names_of(n), broadcast=kind, fanout=fanout)
+        f.publish(fleet_params())
+        f.settle()
+        sched = compile_broadcast_schedule(n, kind=kind, fanout=fanout)
+        assert sched.depth == depth
+        assert f.stats["max_hop_depth"] == depth
+        assert f.verify_bitexact()
+
+
+def test_late_joiner_rides_its_own_group():
+    # a joiner holds no base: it groups apart from the delta cohort, so
+    # the publish wave encodes twice (delta tree + full single) and both
+    # cohorts converge bit-identically
+    f = make_fleet(names_of(6), broadcast="tree", fanout=2)
+    captured = []
+    count_encodes(f, captured)
+    f.publish(fleet_params())
+    f.settle()
+    f.join("zz")
+    f.publish(perturb(fleet_params()))
+    f.settle()
+    assert len(captured) == 3  # v1 full, v2 delta group, v2 joiner full
+    modes = {u.mode for u in captured[1:]}
+    assert modes == {"delta", "full"}
+    assert f.verify_bitexact()
+    assert tree_bits_equal(f.replicas["zz"].params,
+                           f.replicas["r00"].params)
+
+
+def test_n64_tree_egress_4x_below_star():
+    # the fig_tree gate's core claim at fleet scale: same delta ratio,
+    # >=4x less trainer egress (fanout 2 => exactly 32x here)
+    names = names_of(64)
+    star = make_fleet(names, broadcast="star")
+    tree = make_fleet(names, broadcast="tree", fanout=2)
+    v1 = fleet_params()
+    v2 = perturb(v1)
+    for f in (star, tree):
+        f.publish(v1)
+        f.settle()
+    s0 = star.stats["trainer_egress_bytes"]
+    t0 = tree.stats["trainer_egress_bytes"]
+    for f in (star, tree):
+        f.publish(v2)
+        f.settle()
+        assert f.verify_bitexact()
+    star_egress = star.stats["trainer_egress_bytes"] - s0
+    tree_egress = tree.stats["trainer_egress_bytes"] - t0
+    assert star_egress >= 4 * tree_egress
+    assert (tree.stats["trainer_egress_bytes"] + tree.stats["forward_bytes"]
+            == star.stats["trainer_egress_bytes"])
+
+
+# ---------------------------------------------------------------------------
+# loud failures at the fleet seam
+# ---------------------------------------------------------------------------
+
+def test_fleet_rejects_unknown_broadcast_kind():
+    with pytest.raises(ValueError, match="unknown broadcast kind"):
+        make_fleet(("a", "b"), broadcast="ring")
+
+
+def test_fleet_stale_schedule_fails_loudly():
+    f = make_fleet(("a", "b", "c"), broadcast="tree", fanout=2)
+    plain = f.engine.plan_for(fleet_params())  # schedule-free plan
+    f.engine.plan_for = lambda params, **kw: plain
+    f.publish(fleet_params())
+    with pytest.raises(RuntimeError, match="stale wsync broadcast schedule"):
+        f.round()
+
+
+# ---------------------------------------------------------------------------
+# in-mesh lowering: wsync_hop_perms + the broadcast executors
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 32), st.integers(1, 8), st.integers(0, 2))
+@settings(max_examples=25, deadline=None)
+def test_wsync_hop_perms_cover_every_rank_once(n, fanout, kind_ix):
+    s = compile_broadcast_schedule(n, kind=KINDS[kind_ix], fanout=fanout)
+    ranks = tuple(range(100, 100 + n + 1))  # distinct device ranks
+    levels = wsync_hop_perms(s, ranks)
+    assert len(levels) == s.depth
+    dsts = [d for level in levels for _, d in level]
+    assert sorted(dsts) == sorted(ranks[1:])  # delivered exactly once
+    holders = {ranks[0]}
+    for level in levels:
+        for src, dst in level:
+            assert src in holders  # only a rank that already holds it
+        holders.update(d for _, d in level)
+
+
+def test_wsync_hop_perms_stale_ranks_raise():
+    s = compile_broadcast_schedule(4, kind="tree", fanout=2)
+    with pytest.raises(ValueError, match="stale broadcast schedule"):
+        wsync_hop_perms(s, (0, 1, 2, 3))  # 3 receivers for a 4-schedule
+
+
+def test_execute_wsync_broadcast_requires_schedule(mesh):
+    plan = compile_wsync_plan(fleet_params(), "data", policy=POL, n_dev=1)
+    with pytest.raises(ValueError, match="no BroadcastSchedule"):
+        execute_wsync_broadcast(plan, fleet_params(), "data", (0,))
+
+
+def test_inmesh_broadcast_parity_single_device(mesh):
+    # pipeline on a 1-device mesh: every hop level is one identity
+    # ppermute pair, so the whole multi-hop replay must return the input
+    # bits — plan-driven and planless twins agree with each other and
+    # with the single-hop reference
+    params = fleet_params()
+    sched = compile_broadcast_schedule(3, kind="pipeline")
+    plan = compile_wsync_plan(params, "data", policy=POL, n_dev=1,
+                              broadcast="pipeline", n_receivers=3)
+    ranks = (0, 0, 0, 0)
+    planned, pf = jax.jit(_shmap(
+        lambda t: execute_wsync_broadcast(plan, t, "data", ranks),
+        mesh))(params)
+    planless, lf = jax.jit(_shmap(
+        lambda t: broadcast_weights(t, "data", sched, ranks, policy=POL),
+        mesh))(params)
+    single, sf = jax.jit(_shmap(
+        lambda t: sync_weights(t, "data", [(0, 0)], policy=POL),
+        mesh))(params)
+    assert int(pf) == 0 and int(lf) == 0 and int(sf) == 0
+    assert tree_bits_equal(planned, params)
+    assert tree_bits_equal(planless, params)
+    assert tree_bits_equal(planned, planless)
+    assert tree_bits_equal(planned, single)
+
+
+def test_inmesh_broadcast_delta_parity_single_device(mesh):
+    base = fleet_params(seed=5)
+    new = perturb(base, seed=6)
+    sched = compile_broadcast_schedule(2, kind="pipeline")
+    plan = compile_wsync_plan(new, "data", policy=POL, n_dev=1,
+                              broadcast="pipeline", n_receivers=2)
+    planned, pf = jax.jit(_shmap(
+        lambda t, b: execute_wsync_broadcast(plan, t, "data", (0, 0, 0),
+                                             base=b),
+        mesh, n_in=2))(new, base)
+    planless, lf = jax.jit(_shmap(
+        lambda t, b: broadcast_weights(t, "data", sched, (0, 0, 0),
+                                       policy=POL, base=b),
+        mesh, n_in=2))(new, base)
+    assert int(pf) == 0 and int(lf) == 0
+    assert tree_bits_equal(planned, new)
+    assert tree_bits_equal(planless, new)

@@ -159,6 +159,76 @@ def test_obs_span_convention_documented():
 
 
 # ---------------------------------------------------------------------------
+# Broadcast-schedule section: the kind table IS sched.plan.BROADCAST_KINDS
+# ---------------------------------------------------------------------------
+
+def _broadcast_section():
+    text = _doc_text()
+    m = re.search(r"^## Broadcast schedules\n(.*?)(?=^## )", text,
+                  re.MULTILINE | re.DOTALL)
+    assert m, "ARCHITECTURE.md has no '## Broadcast schedules' section"
+    return m.group(1)
+
+
+def test_broadcast_kind_table_matches_registry():
+    """Every broadcast kind is a documented table row and vice versa —
+    the plan-kind-table pattern applied to the fan-out topologies."""
+    from repro.sched.plan import BROADCAST_KINDS
+
+    rows = []
+    for line in _broadcast_section().splitlines():
+        if not line.startswith("|") or re.match(r"^\|[\s\-|]+\|$", line):
+            continue
+        cells = [c.strip() for c in line.strip("|").split("|")]
+        if cells and cells[0] != "kind":
+            rows.append(cells)
+    doc_kinds = {re.sub(r"`", "", r[0]) for r in rows}
+    assert doc_kinds == set(BROADCAST_KINDS), (
+        f"broadcast table {sorted(doc_kinds)} != "
+        f"BROADCAST_KINDS {sorted(BROADCAST_KINDS)}")
+
+
+def test_broadcast_section_symbols_are_real():
+    """The forwarding-invariant and re-parenting machinery the section
+    promises exists and is exported where the doc says it is."""
+    import importlib
+
+    section = _broadcast_section()
+    for ref in ("BroadcastSchedule", "RoutedUpdate", "route_for",
+                "verify_bitexact", "integrity_ledger", "wsync_hop_perms",
+                "execute_wsync_broadcast", "broadcast_weights",
+                "fleet_reparents_total", "fleet:forward"):
+        assert ref in section, f"Broadcast section does not mention {ref}"
+    sched = importlib.import_module("repro.sched")
+    sync = importlib.import_module("repro.sync")
+    for mod, attrs in [(sched, ("BroadcastSchedule", "BROADCAST_KINDS",
+                                "compile_broadcast_schedule",
+                                "wsync_hop_perms",
+                                "execute_wsync_broadcast")),
+                       (sync, ("RoutedUpdate", "broadcast_weights"))]:
+        for a in attrs:
+            assert hasattr(mod, a), a
+    from repro.sched.plan import BroadcastSchedule, CommPlan
+
+    assert hasattr(BroadcastSchedule("tree", 2, 4), "route_for")
+    assert "broadcast" in {f.name for f in
+                           __import__("dataclasses").fields(CommPlan)}
+
+
+def test_broadcast_metrics_documented_in_obs_table():
+    """The per-hop accounting series named by the broadcast section are
+    canonical metrics (present in obs.names.METRICS and the doc table)."""
+    from repro.obs.names import SPECS
+
+    section = _broadcast_section()
+    for name in ("fleet_trainer_egress_bytes_total", "fleet_forwards_total",
+                 "fleet_forwarded_bytes_total", "fleet_hop_depth",
+                 "fleet_reparents_total"):
+        assert name in SPECS, name
+        assert name in section, f"Broadcast section does not cite {name}"
+
+
+# ---------------------------------------------------------------------------
 # Failure model section: the fault taxonomy IS runtime.faults.FAULT_KINDS
 # ---------------------------------------------------------------------------
 

@@ -32,8 +32,9 @@ from repro.core.integrity import (WireIntegrityError, crc32_tree, flip_bit)
 from repro.core.policy import CompressionPolicy
 from repro.runtime.faults import (FaultConfig, FaultEvent, FaultPlan,
                                   FaultyWire, corrupt_payload)
-from repro.sync import (FleetConfig, SyncFleet, WeightSyncEngine,
-                        apply_update, update_checksum, verify_update)
+from repro.sync import (FleetConfig, RoutedUpdate, SyncFleet,
+                        WeightSyncEngine, apply_update, update_checksum,
+                        verify_update)
 
 POL = CompressionPolicy(min_bytes=0)
 
@@ -472,3 +473,145 @@ def test_fleet_obs_accounting(tmp_path):
     finally:
         obs.set_enabled(None)
         obs.reset()
+
+
+# ---------------------------------------------------------------------------
+# Broadcast schedules under chaos: forwarded hops, dead interiors
+# ---------------------------------------------------------------------------
+
+def test_corrupt_payload_routed_envelope_targets_inner_wire():
+    # corruption of a scheduled delivery damages the forwarded BITS, not
+    # the routing envelope — exactly what the next hop's CRC must catch
+    eng = WeightSyncEngine(policy=POL)
+    eng.publish(make_params())
+    update = eng.update_for("r0")
+    ru = RoutedUpdate(update, (("r1", ()),), hop=1)
+    bad = corrupt_payload(ru, np.random.default_rng(0))
+    assert isinstance(bad, RoutedUpdate)
+    assert bad.route == ru.route and bad.hop == ru.hop
+    assert not verify_update(bad.update)
+    assert verify_update(update)  # the shared original is untouched
+
+
+def test_fleet_corrupted_forward_rejected_at_next_hop(tmp_path):
+    # 3-replica pipeline, round-1 ordinals: 0 trainer->r0, 1 r0 ack,
+    # 2 r0->r1 forward, 3 r1 ack, 4 r1->r2 forward, 5 r2 ack.  Corrupt
+    # the FORWARDED hop (ordinal 2): r1's own CRC check rejects it, and
+    # the damage is NOT forwarded on to r2.
+    plan = FaultPlan.scripted({2: "corrupt"})
+    fleet = fleet_fixture(tmp_path, names=("r0", "r1", "r2"),
+                          broadcast="pipeline", plan=plan)
+    fleet.publish(make_params())
+    fleet.settle()
+    assert fleet.verify_bitexact()
+    assert fleet.replicas["r1"].rejects["checksum"] == 1
+    assert fleet.replicas["r2"].rejects["checksum"] == 0  # never spread
+    led = fleet.integrity_ledger()
+    assert led["injected"] == led["seen"] == led["detected"] == 1
+    assert led["silent"] == 0 and led["lost"] == 0
+    assert fleet.stats["escalations"] == 1  # r1 nacked -> full
+
+
+def test_fleet_dead_interior_reparents_subtree(tmp_path):
+    # white-box mid-round kill: the interior node dies AFTER the trainer
+    # wired its envelope but BEFORE delivery, so the whole subtree's
+    # copies evaporate with it and must re-parent to direct trainer sends
+    fleet = fleet_fixture(tmp_path, names=("r0", "r1", "r2"),
+                          broadcast="pipeline")
+    p1 = make_params()
+    fleet.publish(p1)
+    fleet.settle()
+    fleet.publish(perturb(p1))
+    fleet._round += 1
+    fleet.wire.advance_round()
+    sent = fleet._send_updates()  # one envelope: r0, route r1 -> r2
+    assert sent == {"r0", "r1", "r2"}
+    fleet.kill("r0")
+    fleet._deliver_to_replicas()  # evaporates at dead r0
+    fleet._drain_trainer()
+    assert fleet._orphans == {"r1", "r2"}
+    assert fleet.stats["reparents"] == 2
+    assert sum(1 for _, e in fleet.trace if e.startswith("reparent")) == 2
+    fleet.settle()  # orphans served direct full sends, then rejoin
+    assert fleet._orphans == set()
+    assert fleet.verify_bitexact()
+    assert fleet.replicas["r0"].params is None  # still dead
+    assert fleet.integrity_ledger()["silent"] == 0
+
+
+def test_fleet_delayed_forward_times_out_then_converges(tmp_path):
+    # delay the r1->r2 forwarded envelope one round: r2 times out, the
+    # retry and the matured envelope both arrive, the duplicate re-acks
+    plan = FaultPlan.scripted({4: ("delay", 1)})
+    fleet = fleet_fixture(tmp_path, names=("r0", "r1", "r2"),
+                          broadcast="pipeline", plan=plan)
+    fleet.publish(make_params())
+    assert fleet.settle() == 2
+    assert fleet.verify_bitexact()
+    assert fleet.stats["timeouts"] == 1
+    r2 = fleet.replicas["r2"]
+    assert r2.applied == 1 and r2.stale_seen == 1
+    assert fleet.integrity_ledger()["silent"] == 0
+
+
+def test_fleet_delayed_envelope_matures_at_killed_interior(tmp_path):
+    # the root envelope is delayed a round, and its holder is killed in
+    # the meantime: the matured delivery evaporates at the dead interior
+    # and orphans the subtree, which converges through direct re-sends
+    plan = FaultPlan.scripted({0: ("delay", 1)},
+                              events=[FaultEvent(2, "kill", "r0")])
+    fleet = fleet_fixture(tmp_path, names=("r0", "r1", "r2"),
+                          broadcast="pipeline", plan=plan)
+    fleet.publish(make_params())
+    fleet.settle()
+    assert fleet.stats["reparents"] == 2  # r1, r2 re-parented via dead r0
+    assert fleet.live_replicas() == ("r1", "r2")
+    assert fleet.verify_bitexact()
+    assert fleet.stats["timeouts"] == 3  # the whole round-1 wave stalled
+    assert fleet.integrity_ledger()["silent"] == 0
+
+
+def test_fleet_corrupt_envelope_lost_at_dead_interior(tmp_path):
+    # corrupt + kill on the same envelope: the corruption never reaches a
+    # CRC check (the holder is dead) and must be accounted as LOST, while
+    # the orphaned subtree still converges bit-exactly
+    plan = FaultPlan.scripted({0: "corrupt"})
+    fleet = fleet_fixture(tmp_path, names=("r0", "r1", "r2"),
+                          broadcast="pipeline", plan=plan)
+    fleet.publish(make_params())
+    fleet._round += 1
+    fleet.wire.advance_round()
+    fleet._send_updates()  # ordinal 0: the corrupted envelope to r0
+    fleet.kill("r0")
+    fleet._deliver_to_replicas()
+    fleet._drain_trainer()
+    led = fleet.integrity_ledger()
+    assert led["injected"] == led["lost"] == 1
+    assert led["seen"] == led["detected"] == 0 and led["silent"] == 0
+    assert fleet._orphans == {"r1", "r2"}
+    fleet.settle()
+    assert fleet.verify_bitexact()
+
+
+@pytest.mark.parametrize("kind,fanout", [("tree", 2), ("pipeline", 1)])
+def test_fleet_chaos_broadcast_lossless(tmp_path, kind, fanout):
+    # the chaos gate over a scheduled fleet: generated drops/corruptions/
+    # delays + lifecycle events across forwarded hops, and still zero
+    # silent corruptions, an exact ledger, and bit-exact convergence
+    names = ("r0", "r1", "r2", "r3", "r4")
+    cfg = FaultConfig(seed=29, rounds=12, drop_rate=0.1, corrupt_rate=0.1,
+                      delay_rate=0.1, max_delay=2, kills=1, joins=1,
+                      replicas=names)
+    fleet = fleet_fixture(tmp_path, names=names, broadcast=kind,
+                          fanout=fanout, max_retries=30, backoff_cap=2,
+                          plan=FaultPlan.generate(cfg))
+    p = make_params()
+    for i in range(4):
+        p = perturb(p, seed=40 + i)
+        fleet.publish(p)
+        fleet.settle(max_rounds=60)
+    assert fleet.converged() and fleet.verify_bitexact()
+    led = fleet.integrity_ledger()
+    assert led["silent"] == 0
+    assert led["injected"] == led["seen"] + led["lost"]
+    assert fleet.stats["forwards"] > 0  # the schedule actually routed
