@@ -1,11 +1,42 @@
 """Shared helpers for the paper-figure benchmarks."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# repo-root perf trajectory (one JSON list, appended per run; schema in
+# benchmarks/README.md)
+TRAJECTORY_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_TRAJECTORY.json")
+
+
+def append_trajectory(record: dict, path: str = None) -> str:
+    """Append one run record to the perf trajectory (atomic rewrite).
+
+    The file is a JSON LIST of records so CI and humans can diff the
+    whole history; an unreadable/corrupt file restarts the list rather
+    than failing the benchmark that carried the record."""
+    path = TRAJECTORY_PATH if path is None else path
+    try:
+        with open(path) as f:
+            records = json.load(f)
+        if not isinstance(records, list):
+            records = []
+    except (OSError, ValueError):
+        records = []
+    records.append(record)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(records, f, indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
 
 
 def realistic_tensor(kind: str, n: int, dtype, seed: int = 0):

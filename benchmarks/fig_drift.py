@@ -1,0 +1,151 @@
+"""Drift detection: the observatory flags stale plans after a data shift.
+
+Compile-time wire predictions (``CommPlan`` byte accounting) are only as
+good as the calibration data behind them.  The observatory's drift
+detector (``src/repro/obs/drift.py``) compares the live wire ratio of
+every executed plan against its compile-time prediction over a sliding
+window, with hysteresis so a single noisy step cannot fire it.
+
+This benchmark drives the weight-sync engine through the canonical drift
+story:
+
+  1. **warmup** — small optimizer steps (relative N(0, 2e-4)): most bf16
+     weights move sub-ULP, the XOR delta stays inside the calibrated
+     widths, and the live wire matches the plan's delta prediction
+     EXACTLY — the detector must stay silent (zero false positives);
+  2. **shift** — the update scale jumps ~3 orders of magnitude (e.g. a
+     learning-rate spike or fresh task data): lo-deltas overflow the
+     calibrated widths, the engine falls back to full sends, the live
+     wire ratio detaches from the delta prediction, and the detector
+     must fire within ``fire_within`` publishes and name the stale plan.
+
+``--smoke`` (<30 s) gates: ZERO drift events during warmup AND a drift
+event within ``fire_within`` publishes of the shift.  Every run appends
+a record to the repo-root ``BENCH_TRAJECTORY.json`` (schema in
+benchmarks/README.md).
+
+Usage:
+  python -m benchmarks.fig_drift            # full loop + regret table
+  python -m benchmarks.fig_drift --smoke    # CI-gate mode
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+
+from benchmarks.common import append_trajectory, table
+from benchmarks.fig_sync import _calibrated_policy, _make_params, \
+    _optimizer_step
+
+SMOKE_BUDGET_S = 30  # enforced by benchmarks.run --smoke
+
+
+def run_drift_loop(n: int = 1 << 18, warmup: int = 8, shifted: int = 6,
+                   shift_scale: float = 0.5, fire_within: int = 5):
+    """Warmup -> entropy shift through the sync engine; returns the gate
+    measurements (false positives during warmup, fire latency after)."""
+    from repro import obs, sched
+    from repro.obs import drift as drift_lib
+    from repro.sync import WeightSyncEngine, apply_update
+
+    obs.clear_observatory()
+    params = _make_params(n)
+    v1 = _optimizer_step(params, 2e-4, seed=1)
+    policy, (w, wl) = _calibrated_policy(params, v1)
+    eng = WeightSyncEngine(policy=policy, plan_cache=sched.PlanCache())
+
+    held = None
+    rows = []
+    events_at_shift = 0
+    fired_at = None
+    for it in range(warmup + shifted):
+        if 0 < it < warmup:
+            params = _optimizer_step(params, 2e-4, seed=100 + it)
+        elif it >= warmup:
+            # the shift: ~3 orders of magnitude larger steps — lo-deltas
+            # overflow the widths calibrated on the warmup distribution
+            params = _optimizer_step(params, shift_scale, seed=200 + it)
+        eng.publish(params)
+        upd = eng.update_for("rollout-0")
+        held = apply_update(upd, base_params=held
+                            if upd.base_version is not None else None)
+        eng.ack("rollout-0", upd.version, upd.epoch)
+        n_events = len(drift_lib.detector().report().events)
+        if it == warmup - 1:
+            events_at_shift = n_events
+        if it >= warmup and fired_at is None and n_events > events_at_shift:
+            fired_at = it - warmup + 1  # publishes since the shift, 1-based
+        rows.append([it, "warm" if it < warmup else "SHIFTED", upd.mode,
+                     f"{upd.ratio:.3f}", n_events])
+    rep = drift_lib.detector().report()
+    table(f"Fig. drift — live-vs-predicted wire ratio through a "
+          f"distribution shift (bf16 {2 * n:,} elems, delta widths "
+          f"exp={w}/lo={wl}, shift scale {shift_scale:g})",
+          ["publish", "phase", "mode", "wire/raw", "drift events"], rows)
+    stale = ", ".join(s.key_hex for s in rep.stale) or "none"
+    print(f"  false positives during warmup: {events_at_shift}; detector "
+          f"fired {fired_at if fired_at is not None else '>'+str(shifted)} "
+          f"publish(es) after the shift (budget {fire_within}); "
+          f"stale plans: {stale}")
+    return {"false_positives": events_at_shift, "fired_at": fired_at,
+            "fire_within": fire_within, "warmup": warmup,
+            "shifted": shifted, "n_events": len(rep.events),
+            "n_stale": len(rep.stale)}
+
+
+def run_regret_table(top: int = 8):
+    """Width-regret rows accumulated by the loop above (the analytics the
+    adaptive-wire roadmap item will act on)."""
+    from repro.obs import regret as regret_lib
+
+    rows = [[r.kind, r.dtype_name, f"{r.achieved_width}->{r.optimal_width}",
+             f"{r.achieved_wire_bytes / 2**10:.1f}",
+             f"{r.optimal_wire_bytes / 2**10:.1f}",
+             f"{r.regret_bytes / 2**10:+.1f}"]
+            for r in regret_lib.width_regret()[:top]]
+    table("Fig. drift b — width regret (achieved vs recalibrated-optimal "
+          "wire, from live per-bucket samples)",
+          ["kind", "dtype", "width", "wire KiB", "opt KiB", "regret KiB"],
+          rows)
+    return rows
+
+
+def run(smoke: bool = False):
+    from repro import obs
+
+    prior = None  # restore the env-driven switch afterwards
+    obs.set_enabled(True)
+    try:
+        loop = run_drift_loop(n=(1 << 17) if smoke else (1 << 18))
+        regret_rows = run_regret_table()
+    finally:
+        obs.set_enabled(prior)
+    assert loop["false_positives"] == 0, (
+        f"{loop['false_positives']} drift event(s) during stationary "
+        f"warmup — the hysteresis gate is leaking false positives")
+    assert loop["fired_at"] is not None, (
+        f"detector silent through {loop['shifted']} post-shift publishes — "
+        f"full-send fallbacks should have detached live from predicted")
+    assert loop["fired_at"] <= loop["fire_within"], (
+        f"detector fired {loop['fired_at']} publishes after the shift "
+        f"(> budget {loop['fire_within']})")
+    append_trajectory({
+        "date": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"),
+        "source": "benchmarks.fig_drift",
+        "smoke": bool(smoke),
+        "gates": {"false_positives": loop["false_positives"],
+                  "fired_at": loop["fired_at"],
+                  "fire_within": loop["fire_within"],
+                  "n_events": loop["n_events"]},
+        "regret_rows": len(regret_rows),
+    })
+    return {"loop": loop, "regret_rows": regret_rows}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-gate mode (<30 s)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

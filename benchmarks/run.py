@@ -4,8 +4,11 @@
                                             [--smoke]
 
 ``--json`` additionally writes a machine-readable summary (per-module wall
-time / pass-fail / fallback counts, plus the obs metrics snapshot) without
-changing anything on stdout — CI diffs the file, humans read the console.
+time / pass-fail / fallback counts / gate measurements, plus the obs
+metrics snapshot) without changing anything on stdout — CI diffs the
+file, humans read the console — and appends one record (date, per-module
+wall + gates, failures, obs snapshot digest) to the repo-root
+``BENCH_TRAJECTORY.json`` perf trajectory (schema: benchmarks/README.md).
 
 ``--smoke`` runs each module in its CI-gate configuration (``run(smoke=
 True)`` where the module supports it) and ENFORCES the module's stated
@@ -16,6 +19,8 @@ contract (benchmarks/README.md), not a hope.
 from __future__ import annotations
 
 import argparse
+import datetime
+import hashlib
 import importlib
 import inspect
 import json
@@ -41,8 +46,27 @@ MODULES = [
     ("sync", "benchmarks.fig_sync"),
     ("faults", "benchmarks.fig_faults"),
     ("tree", "benchmarks.fig_tree"),
+    ("drift", "benchmarks.fig_drift"),
     ("obs", "repro.obs.dump"),
 ]
+
+
+def _scalarize(obj, depth: int = 3):
+    """Keep the JSON-scalar skeleton of a module's ``run()`` return value
+    (gate measurements); drop tables/arrays/objects."""
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if depth > 0 and isinstance(obj, dict):
+        out = {}
+        for k, v in obj.items():
+            s = _scalarize(v, depth - 1)
+            if s is not None or v is None:
+                out[str(k)] = s
+        return out or None
+    try:  # 0-d numpy / jax scalars
+        return _scalarize(obj.item(), 0)
+    except (AttributeError, ValueError, TypeError):
+        return None
 
 
 def _supports_smoke(fn) -> bool:
@@ -76,16 +100,22 @@ def main():
         # Reset the counters per module: fallback attribution must name the
         # benchmark that actually degraded, not accumulate across figs (the
         # once-per-op warning also re-arms, so each module logs its own).
+        # Same for the observatory: regret samples / drift windows / the
+        # flight recorder must describe the module being measured, not its
+        # predecessors (the metrics registry itself keeps accumulating —
+        # the final snapshot is the whole run's).
         kernels.clear_fallbacks()
+        obs.clear_observatory()
         ok = True
         budget_s = None
+        gates = None
         try:
             mod = importlib.import_module(modname)
             if args.smoke and _supports_smoke(mod.run):
                 budget_s = getattr(mod, "SMOKE_BUDGET_S", None)
-                mod.run(smoke=True)
+                gates = _scalarize(mod.run(smoke=True))
             else:
-                mod.run()
+                gates = _scalarize(mod.run())
             print(f"  [{key} done in {time.time()-t0:.1f}s]")
         except Exception:
             ok = False
@@ -114,21 +144,40 @@ def main():
         modules_out.append({"key": key, "module": modname, "ok": ok,
                             "wall_s": wall_s, "budget_s": budget_s,
                             "over_budget": over_budget,
-                            "fallbacks": per_module})
+                            "fallbacks": per_module, "gates": gates})
     print(f"\nkernel fast-path fallbacks (all benchmarks): "
           f"{total if total else 'none'}")
     print(f"{'ALL BENCHMARKS PASSED' if not failures else 'FAILED: ' + ', '.join(failures)}")
     if args.json:
+        obs_snap = obs.snapshot()
         summary = {
             "modules": modules_out,
             "failures": failures,
             "fallbacks_total": total,
-            "obs": obs.snapshot(),
+            "obs": obs_snap,
         }
         path = os.path.abspath(args.json)
         os.makedirs(os.path.dirname(path), exist_ok=True)
         with open(path, "w") as f:
             json.dump(summary, f, indent=2, sort_keys=True)
+        # one perf-trajectory record per recorded run: per-module wall +
+        # gate measurements, tied to the obs snapshot by digest (schema in
+        # benchmarks/README.md)
+        digest = hashlib.sha256(
+            json.dumps(obs_snap, sort_keys=True, default=str)
+            .encode()).hexdigest()[:16]
+        from benchmarks.common import append_trajectory
+        append_trajectory({
+            "date": datetime.datetime.now(
+                datetime.timezone.utc).isoformat(timespec="seconds"),
+            "source": "benchmarks.run",
+            "smoke": bool(args.smoke),
+            "modules": {m["key"]: {"ok": m["ok"], "wall_s": m["wall_s"],
+                                   "gates": m["gates"]}
+                        for m in modules_out},
+            "failures": failures,
+            "obs_digest": digest,
+        })
     sys.exit(1 if failures else 0)
 
 

@@ -41,6 +41,41 @@ def block_range_stats(x: jax.Array, block: int = 512) -> jax.Array:
     return jnp.where(jnp.any(nz, axis=-1), mx - base + 1, 0)
 
 
+def width_cost_curve(
+    x: jax.Array,
+    *,
+    block: int = 512,
+    max_exc_frac: float = 0.02,
+) -> tuple:
+    """The full predicted cost curve: one :class:`WidthChoice` per candidate
+    exponent width ``1..exp_bits`` (escape rate and wire ratio AT that
+    width).  :func:`choose_width` picks from this curve; the regret
+    analytics (``obs/regret.py``) score achieved-vs-optimal widths with it.
+    """
+    lay = codec.layout_of(x.dtype)
+    rngs = np.asarray(block_range_stats(x, block=block))
+    exp, _ = codec.split_planes(x)
+    ent = float(codec.exponent_entropy_bits(exp, lay.exp_bits))
+    n_blocks = len(rngs)
+    cap = packing.exception_capacity(n_blocks, max_exc_frac)
+    curve = []
+    for w in range(1, lay.exp_bits + 1):
+        ratio = (
+            lay.lo_bits
+            + w
+            + 8.0 / block  # bases
+            + (cap * (4 + block) * 8.0) / (n_blocks * block)  # exceptions
+        ) / lay.total_bits
+        curve.append(WidthChoice(
+            width=w,
+            exc_frac=max_exc_frac,
+            est_exc_rate=float(np.mean(rngs >= (1 << w))),
+            est_ratio=ratio,
+            entropy_bits=ent,
+        ))
+    return tuple(curve)
+
+
 def choose_width(
     x: jax.Array,
     *,
@@ -55,34 +90,11 @@ def choose_width(
     and use (the paper's stability claim says drift is small; we don't rely
     on it for correctness, only for speed).
     """
-    lay = codec.layout_of(x.dtype)
-    rngs = np.asarray(block_range_stats(x, block=block))
-    exp, _ = codec.split_planes(x)
-    ent = float(codec.exponent_entropy_bits(exp, lay.exp_bits))
-    n_blocks = len(rngs)
-    best = None
-    for w in range(1, lay.exp_bits + 1):
-        exc_rate = float(np.mean(rngs >= (1 << w)))
-        if exc_rate <= target_exc_rate or w == lay.exp_bits:
-            w_use = min(w + margin_bits, lay.exp_bits)
-            exc_rate = float(np.mean(rngs >= (1 << w_use)))
-            cap = packing.exception_capacity(n_blocks, max_exc_frac)
-            ratio = (
-                lay.lo_bits
-                + w_use
-                + 8.0 / block  # bases
-                + (cap * (4 + block) * 8.0) / (n_blocks * block)  # exceptions
-            ) / lay.total_bits
-            best = WidthChoice(
-                width=w_use,
-                exc_frac=max_exc_frac,
-                est_exc_rate=exc_rate,
-                est_ratio=ratio,
-                entropy_bits=ent,
-            )
-            break
-    assert best is not None
-    return best
+    curve = width_cost_curve(x, block=block, max_exc_frac=max_exc_frac)
+    for c in curve:
+        if c.est_exc_rate <= target_exc_rate or c.width == curve[-1].width:
+            return curve[min(c.width + margin_bits, curve[-1].width) - 1]
+    raise AssertionError("unreachable: the last width always matches")
 
 
 def choose_delta_widths(

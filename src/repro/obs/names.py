@@ -16,6 +16,12 @@ import dataclasses
 
 from repro.obs import config
 from repro.obs import metrics as metrics_lib
+from repro.obs import recorder as recorder_lib
+
+# plan_wire_ratio_hist buckets: wire/raw, so the interesting mass is
+# (0, 1]; >1 catches pathological expansion (tiny payload overheads)
+RATIO_BUCKETS = (0.05, 0.1, 0.15, 0.2, 0.25, 0.3, 0.4,
+                 0.5, 0.65, 0.8, 1.0, 1.25)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +49,24 @@ METRICS = (
     MetricSpec("plan_wire_ratio", "gauge", ("kind",),
                "sched/executor.py",
                "last consolidated wire ratio (wire/raw) per plan kind"),
+    MetricSpec("plan_wire_ratio_hist", "histogram", ("kind",),
+               "sched/executor.py",
+               "distribution of consolidated wire ratios per plan kind",
+               buckets=RATIO_BUCKETS),
+    # -- per-bucket wire ledger (obs/regret.py reads it back): plan kinds
+    #    sum EXACTLY to the consolidated plan:<kind> WireReports; host
+    #    paths ledger under their own kinds (wsync_host, p2p_host)
+    MetricSpec("bucket_wire_raw_bytes_total", "counter",
+               ("kind", "dtype", "width"), "sched/executor.py",
+               "per-bucket raw bytes, by (plan kind, dtype, width)"),
+    MetricSpec("bucket_wire_bytes_total", "counter",
+               ("kind", "dtype", "width"), "sched/executor.py",
+               "per-bucket packed wire bytes, by (plan kind, dtype, width)"),
+    # -- obs/drift.py
+    MetricSpec("wire_drift_events_total", "counter", ("kind",),
+               "obs/drift.py",
+               "drift-detector firings (live ratio left the plan's "
+               "compile-time prediction)"),
     # -- sched/cache.py: gauges mirror PlanCache.cache_info() after every
     #    lookup ("default" = the process cache, "local" = private instances)
     MetricSpec("plan_cache_hits", "gauge", ("cache",),
@@ -195,23 +219,72 @@ SPANS = (
      "trainer failover: checkpoint restore + epoch fence"),
     ("fleet:forward", "sync/fleet.py",
      "instant: an interior replica forwarded the encoded wire verbatim"),
+    ("drift:fire", "obs/drift.py",
+     "instant: the drift detector flagged a stale plan (live wire ratio "
+     "beyond the hysteresis threshold)"),
 )
+
+
+class _RecordedMetric:
+    """Tee wrapper: forwards each observation to the registry metric AND
+    into the flight recorder (``obs/recorder.py``), keyed by the same
+    declared-order label string — so every instrumented series gets a
+    windowed history for free."""
+
+    __slots__ = ("_m",)
+
+    def __init__(self, m):
+        self._m = m
+
+    @property
+    def name(self):
+        return self._m.name
+
+    @property
+    def kind(self):
+        return self._m.kind
+
+    @property
+    def label_names(self):
+        return self._m.label_names
+
+    def series(self):
+        return self._m.series()
+
+    def inc(self, value=1, **labels):
+        self._m.inc(value, **labels)  # validates labels before we record
+        recorder_lib.record(self._m.name, value, self._m._key(labels))
+
+    def dec(self, value=1, **labels):
+        self._m.dec(value, **labels)
+        recorder_lib.record(self._m.name, -value, self._m._key(labels))
+
+    def set(self, value, **labels):
+        self._m.set(value, **labels)
+        recorder_lib.record(self._m.name, value, self._m._key(labels))
+
+    def observe(self, value, **labels):
+        self._m.observe(value, **labels)
+        recorder_lib.record(self._m.name, value, self._m._key(labels))
 
 
 def metric(name: str):
     """The live metric for a canonical ``name`` (no-op when REPRO_OBS=0).
 
     Creates it in the default registry on first use with the spec's
-    declared type/labels, so instrumentation cannot drift from the table.
-    Unknown names raise KeyError."""
+    declared type/labels, so instrumentation cannot drift from the table;
+    observations are teed into the flight recorder.  Unknown names raise
+    KeyError."""
     if not config.enabled():
         _ = SPECS[name]  # typos still fail loudly in disabled mode
         return metrics_lib.NOOP_METRIC
     spec = SPECS[name]
     reg = metrics_lib.registry()
     if spec.kind == "histogram":
-        return reg.histogram(
+        m = reg.histogram(
             spec.name, labels=spec.labels, help=spec.help,
             buckets=spec.buckets or metrics_lib.DEFAULT_TIME_BUCKETS)
-    return getattr(reg, spec.kind)(spec.name, labels=spec.labels,
-                                   help=spec.help)
+    else:
+        m = getattr(reg, spec.kind)(spec.name, labels=spec.labels,
+                                    help=spec.help)
+    return _RecordedMetric(m)
